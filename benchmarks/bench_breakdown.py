@@ -1,0 +1,110 @@
+"""Figure 5 analogue: per-component timing + implicit-vs-explicit speedup.
+
+(a) Where does MWU iteration time go? matvec (P/C SpMV pairs) vs
+    line-search probes vs remaining vector work — microbenchmarked on a
+    mid-solve state.
+(b) The paper's §5.1.2 claim: implicit incidence operators beat the
+    explicit generic-sparse representation (our Coo = the PETSc role).
+    Reported as per-component speedup, like Fig. 5c / Table 4's
+    shared-memory half.
+
+Emits CSV: problem,component,implicit_us,explicit_us,speedup.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Coo, Incidence, MWUOptions, Transposed
+from repro.core.mwu import init_x, make_eta
+from repro.core.smoothing import smax_and_weights, smin_and_weights
+from repro.core.stepsize import binary_search_step
+from repro.graphs import build, rgg
+
+from .common import Csv
+
+
+def _time(fn, *a, n=20):
+    fn(*a)  # compile
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def coo_of_incidence(g):
+    rows = jnp.concatenate([jnp.asarray(g.u), jnp.asarray(g.v)]).astype(jnp.int32)
+    cols = jnp.tile(jnp.arange(g.m, dtype=jnp.int32), 2)
+    vals = jnp.ones((2 * g.m,))
+    return Coo(rows=rows, cols=cols, vals=vals, _shape=(g.n, g.m))
+
+
+def run(scale=14):
+    g = rgg(scale, seed=scale)
+    csv = Csv("problem,component,implicit_us,explicit_us,speedup")
+    imp = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    exp = coo_of_incidence(g)
+
+    rng = np.random.default_rng(0)
+    xe = jnp.asarray(rng.random(g.m))
+    wv = jnp.asarray(rng.random(g.n))
+
+    mv_i = _time(jax.jit(imp.matvec), xe)
+    mv_e = _time(jax.jit(exp.matvec), xe)
+    csv.add("match", "matvec", f"{mv_i:.1f}", f"{mv_e:.1f}", f"{mv_e/mv_i:.2f}")
+    rmv_i = _time(jax.jit(imp.rmatvec), wv)
+    rmv_e = _time(jax.jit(exp.rmatvec), wv)
+    csv.add("match", "matvec_T", f"{rmv_i:.1f}", f"{rmv_e:.1f}", f"{rmv_e/rmv_i:.2f}")
+
+    # vec work (gradients + step direction) and search probes on a
+    # representative state
+    eta = jnp.asarray(make_eta(g.n + 1, 0.1))
+    y = jnp.asarray(rng.random(g.n) * 0.5)
+    z = jnp.asarray(rng.random(16) * 0.5)
+    dy = jnp.asarray(rng.random(g.n) * 1e-3)
+    dz = jnp.asarray(rng.random(16) * 1e-3)
+    x0 = jnp.asarray(rng.random(g.m) * 1e-3)
+
+    def vec_work(y, x0, gvec):
+        _, wp = smax_and_weights(y, eta)
+        d = 0.5 / eta * jnp.maximum(0.0, 1.0 - gvec) * x0
+        return d
+
+    gv = jnp.asarray(rng.random(g.m))
+    t_vec = _time(jax.jit(vec_work), y, x0, gv)
+    t_search = _time(
+        jax.jit(lambda *a: binary_search_step(*a).alpha), y, z, dy, dz, eta
+    )
+    csv.add("match", "vec", f"{t_vec:.1f}", "-", "-")
+    csv.add("match", "search", f"{t_search:.1f}", "-", "-")
+    csv.add("match", "matvec_pair", f"{mv_i + rmv_i:.1f}", "-", "-")
+
+    # end-to-end implicit vs explicit solve (the Fig. 5c headline)
+    from repro.core import OnesRow, solve
+    from repro.graphs.baselines import greedy_maximal_matching
+
+    gm = max(greedy_maximal_matching(g), 1)
+    opts = MWUOptions(eps=0.1, step_rule="newton", max_iter=20000)
+    C1 = OnesRow(c=jnp.ones((g.m,)), inv_bound=jnp.asarray(1.0 / gm))
+
+    def solve_with(op):
+        return solve(op, C1, opts)
+
+    r_imp = solve_with(imp)  # compile + run
+    t0 = time.perf_counter()
+    r_imp = jax.block_until_ready(solve_with(imp))
+    t_imp = time.perf_counter() - t0
+    r_exp = solve_with(exp)
+    t0 = time.perf_counter()
+    r_exp = jax.block_until_ready(solve_with(exp))
+    t_exp = time.perf_counter() - t0
+    assert int(r_imp.status) == int(r_exp.status)
+    csv.add("match", "end2end_solve", f"{t_imp*1e6:.0f}", f"{t_exp*1e6:.0f}",
+            f"{t_exp/max(t_imp,1e-9):.2f}")
+    csv.dump()
+    return csv

@@ -1,0 +1,48 @@
+"""§Roofline table: reads the dry-run records (experiments/dryrun/*.json)
+and prints the per-(arch x shape x mesh) roofline terms, bottleneck,
+MODEL_FLOPS ratio and the step-time lower bound.
+
+Emits CSV:
+arch,shape,mesh,step,compute_s,memory_s,collective_s,bottleneck,
+model_flops_ratio,mfu_upper_bound
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import Csv
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(tag_filter=""):
+    csv = Csv(
+        "arch,shape,mesh,step,compute_s,memory_s,collective_s,bottleneck,"
+        "model_flops_ratio,mfu_upper_bound"
+    )
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag", "") != tag_filter:
+            continue
+        recs.append(r)
+    for r in recs:
+        if r.get("skipped"):
+            csv.add(r["arch"], r["shape"], r["mesh"], r.get("step", "-"),
+                    "-", "-", "-", f"SKIP:{r['reason'][:40]}", "-", "-")
+            continue
+        if not r.get("ok"):
+            csv.add(r["arch"], r["shape"], r["mesh"], r.get("step", "-"),
+                    "-", "-", "-", f"FAIL:{r.get('error','?')[:40]}", "-", "-")
+            continue
+        ro = r["roofline"]
+        csv.add(
+            r["arch"], r["shape"], r["mesh"], r["step"],
+            f"{ro['compute_s']:.3e}", f"{ro['memory_s']:.3e}",
+            f"{ro['collective_s']:.3e}", ro["bottleneck"],
+            f"{ro.get('model_flops_ratio', float('nan')):.3f}",
+            f"{ro.get('mfu_upper_bound', float('nan')):.4f}",
+        )
+    csv.dump()
+    return csv

@@ -1,0 +1,85 @@
+"""Figure 4 / Table 4 analogue: distributed-MWU scaling.
+
+Wall-clock strong scaling on fabricated host devices is meaningless on
+one CPU core, so this benchmark reports what actually scales: the
+per-device work and communication of one distributed MWU iteration,
+derived from compiled HLO at grid sizes G in {2, 4, 8, 16}, plus a
+real multi-device correctness run at G=2 (4 host devices, subprocess).
+
+comm/comp ratio is the paper's Table 4 parenthesized metric.
+
+Emits CSV: grid,devices,flops_per_dev,hbm_bytes_per_dev,wire_bytes_per_dev,
+comm_comp_ratio.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from .common import Csv
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+_PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+import sys; sys.path.insert(0, {src!r})
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.mwu_dist import _dist_solve_local
+from repro.core.mwu import make_eta
+from repro.launch.mesh import make_mesh
+from repro.utils.hlo import analyze_hlo
+
+G = {grid}
+n = 1 << 20
+m = 16 * n
+block = n // G
+e_cell = int(m / (G*G) * 1.3)
+mesh = make_mesh((G, G), ("data", "model"))
+eta = jnp.asarray(make_eta(n + 1, 0.1), jnp.float32)
+
+def single(u, v, msk, x0):
+    def inner(u, v, msk, x0):
+        out = _dist_solve_local(G, block, n, eta, 0.1, jnp.float32(1.0/(n/4)), 1, u[0,0], v[0,0], msk[0,0], x0[0,0])
+        x, *rest = out
+        return (x[None, None], *rest)
+    return jax.shard_map(inner, mesh=mesh,
+        in_specs=(P("data","model",None),)*4,
+        out_specs=(P("data","model",None), P(), P(), P(), P(), P()),
+        check_vma=False)(u, v, msk, x0)
+
+sds = jax.ShapeDtypeStruct
+args = (sds((G,G,e_cell), jnp.int32), sds((G,G,e_cell), jnp.int32),
+        sds((G,G,e_cell), jnp.bool_), sds((G,G,e_cell), jnp.float32))
+sh = (NamedSharding(mesh, P("data","model",None)),)*4
+with mesh:
+    c = jax.jit(single, in_shardings=sh).lower(*args).compile()
+rep = analyze_hlo(c.as_text(), num_partitions=G*G)
+print(json.dumps({{"flops": rep.flops, "bytes": rep.hbm_bytes,
+                  "wire": rep.collective_wire_bytes}}))
+"""
+
+
+def run(grids=(2, 4, 8, 16)):
+    csv = Csv("grid,devices,flops_per_dev,hbm_bytes_per_dev,wire_bytes_per_dev,comm_comp_ratio")
+    from repro.utils.roofline import HBM_BW, ICI_BW
+
+    for G in grids:
+        ndev = G * G
+        prog = _PROG.format(ndev=min(ndev, 256), src=SRC, grid=G)
+        res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                             text=True, timeout=1200)
+        if res.returncode != 0:
+            csv.add(G, ndev, "FAIL", res.stderr[-120:].replace("\n", " "), "-", "-")
+            continue
+        d = json.loads(res.stdout.strip().splitlines()[-1])
+        comm_s = d["wire"] / ICI_BW
+        comp_s = d["bytes"] / HBM_BW  # memory-bound workload
+        csv.add(G, ndev, f"{d['flops']:.3e}", f"{d['bytes']:.3e}",
+                f"{d['wire']:.3e}", f"{comm_s/max(comp_s,1e-12):.3f}")
+    csv.dump()
+    return csv

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, graph suite, CSV emission."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def timed(fn, *args, repeats=1, **kw):
+    """(result, seconds) — min over repeats, first call includes jit."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def graph_suite(small=True):
+    """CPU-budget version of the paper's Table 1 inputs."""
+    from repro.graphs import kron, rgg
+
+    if small:
+        scales_rgg = [10, 12]
+        scales_kron = [9, 11]
+    else:
+        scales_rgg = [12, 14, 16]
+        scales_kron = [11, 13]
+    gs = {}
+    for s in scales_rgg:
+        gs[f"rgg-{s}"] = rgg(s, seed=s)
+    for s in scales_kron:
+        gs[f"kron-{s}"] = kron(s, seed=s, edgefactor=8)
+    return gs
+
+
+class Csv:
+    def __init__(self, header):
+        self.rows = [header]
+
+    def add(self, *vals):
+        self.rows.append(",".join(str(v) for v in vals))
+
+    def dump(self):
+        for r in self.rows:
+            print(r, flush=True)

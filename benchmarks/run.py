@@ -1,0 +1,60 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+  table2  bench_solvers      MWU vs exact LP vs specialized algos
+  table3  bench_stepsize     std / binary / newton step rules
+  fig3    bench_convergence  MWU vs MPCSolver iteration counts
+  fig5    bench_breakdown    component split + implicit-vs-explicit
+  fig4    bench_scaling      distributed per-device work/comm vs grid
+  roofline bench_roofline    dry-run roofline table (§Roofline source)
+
+``python -m benchmarks.run [section ...]`` — default: all. The solver
+benches enable x64 (paper runs in f64 on CPU; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    sections = sys.argv[1:] or ["table2", "table3", "fig3", "fig5", "fig4", "roofline"]
+    t00 = time.perf_counter()
+    for s in sections:
+        print(f"\n===== {s} =====", flush=True)
+        t0 = time.perf_counter()
+        if s == "table2":
+            from . import bench_solvers
+
+            bench_solvers.run(small=True)
+        elif s == "table3":
+            from . import bench_stepsize
+
+            bench_stepsize.run(scale=12)
+        elif s == "fig3":
+            from . import bench_convergence
+
+            bench_convergence.run()
+        elif s == "fig5":
+            from . import bench_breakdown
+
+            bench_breakdown.run(scale=14)
+        elif s == "fig4":
+            from . import bench_scaling
+
+            bench_scaling.run()
+        elif s == "roofline":
+            from . import bench_roofline
+
+            bench_roofline.run()
+        else:
+            print(f"unknown section {s}")
+        print(f"[{s}: {time.perf_counter()-t0:.1f}s]", flush=True)
+    print(f"\n[total: {time.perf_counter()-t00:.1f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

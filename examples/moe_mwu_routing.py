@@ -1,0 +1,28 @@
+"""The paper's technique INSIDE the model: MWU LP router vs top-k.
+
+Builds a skewed routing distribution and shows the MWU router flattening
+expert load under capacity constraints (fewer dropped tokens).
+
+    PYTHONPATH=src python examples/moe_mwu_routing.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers.moe import expert_load, mwu_route, topk_route
+
+rng = np.random.default_rng(0)
+T, E, k = 512, 8, 2
+logits = jnp.asarray(rng.standard_normal((T, E)) * 0.2)
+logits = logits.at[:, 0].add(3.0).at[:, 1].add(2.0)  # hot experts
+cap = int(T * k / E * 1.25)
+
+idx_t, _ = topk_route(logits, k)
+idx_m, _ = mwu_route(logits, k, cap, mwu_iters=64)
+lt = np.asarray(expert_load(idx_t, E))
+lm = np.asarray(expert_load(idx_m, E))
+print(f"capacity/expert: {cap}")
+print(f"top-k   load: {lt}  dropped={np.maximum(lt-cap,0).sum()}")
+print(f"mwu-lp  load: {lm}  dropped={np.maximum(lm-cap,0).sum()}")
+assert np.maximum(lm - cap, 0).sum() <= np.maximum(lt - cap, 0).sum()
+print("MWU router respects capacities better (same LP solver as the graph problems)")

@@ -1,0 +1,4 @@
+"""repro: MWU positive-LP solving (Ju et al., CS.DC 2023) as a multi-pod
+JAX framework. See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Per-architecture configs (exact pool specs) + shape cells."""
+from .base import MeshConfig, ModelConfig, MoEConfig, SSMConfig
+from .registry import ARCH_IDS, all_configs, get
+from .shapes import SHAPES, ShapeCell, applicable, cells_for, input_specs, skip_reason
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "MeshConfig",
+    "ARCH_IDS", "get", "all_configs",
+    "SHAPES", "ShapeCell", "applicable", "cells_for", "input_specs", "skip_reason",
+]

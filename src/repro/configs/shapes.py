@@ -1,0 +1,108 @@
+"""Assigned input-shape cells + ``input_specs()`` (ShapeDtypeStruct stand-ins).
+
+Four cells per architecture (40 total):
+
+  train_4k    seq 4096  x global_batch 256   -> train_step
+  prefill_32k seq 32768 x global_batch 32    -> serve_step (prefill/encode)
+  decode_32k  KV len 32768 x global_batch 128 -> serve_step (1 new token)
+  long_500k   KV len 524288 x global_batch 1  -> serve_step (1 new token)
+
+Skip rules (DESIGN.md §6): encoder-only archs have no decode cells;
+long_500k runs only for sub-quadratic archs (ssm / hybrid / SWA).
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — never
+allocating — exactly what jit.lower consumes in the dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SHAPES", "ShapeCell", "applicable", "skip_reason", "input_specs", "cells_for"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def skip_reason(cfg, cell: ShapeCell) -> str | None:
+    if cell.step == "decode" and not cfg.has_decode:
+        return "encoder-only: no autoregressive step exists"
+    if cell.name == "long_500k" and not cfg.is_subquadratic:
+        return "pure full attention: 512k dense KV cache is not meaningful"
+    return None
+
+
+def applicable(cfg, cell: ShapeCell) -> bool:
+    return skip_reason(cfg, cell) is None
+
+
+def cells_for(cfg):
+    return [c for c in SHAPES.values() if applicable(cfg, c)]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, cell: ShapeCell) -> dict:
+    """Model inputs for this (arch x shape) cell, as ShapeDtypeStructs.
+
+    train:   {"tokens"|"frames"[, "patches"], "targets", "loss_mask"}
+    prefill: {"tokens"|"frames"[, "patches"]}
+    decode:  {"tokens" (B,1) | "frames" (B,1,d)}  (+ cache built separately)
+    """
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    out = {}
+    if cell.step == "decode":
+        if cfg.modality == "audio_frames":
+            out["frames"] = _sds((B, 1, d), jnp.float32)
+        else:
+            out["tokens"] = _sds((B, 1), jnp.int32)
+        return out
+
+    if cfg.modality == "audio_frames":
+        out["frames"] = _sds((B, S, d), jnp.float32)
+    elif cfg.modality == "vision_text":
+        npt = cfg.n_vision_patches
+        out["patches"] = _sds((B, npt, d), jnp.float32)
+        out["tokens"] = _sds((B, S - npt), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32)
+
+    if cell.step == "train":
+        out["targets"] = _sds((B, S), jnp.int32)
+        out["loss_mask"] = _sds((B, S), jnp.float32)
+    return out
+
+
+def concrete_inputs(cfg, cell: ShapeCell, seed: int = 0) -> dict:
+    """Small-footprint concrete batch (reduced configs / smoke tests)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    spec = input_specs(cfg, cell)
+    out = {}
+    for k, s in spec.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if k in ("tokens", "targets") else 2
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape).astype(np.float32) * 0.02)
+    if "loss_mask" in out:
+        out["loss_mask"] = jnp.ones(spec["loss_mask"].shape, jnp.float32)
+    return out

@@ -1,0 +1,53 @@
+"""Core MWU positive-LP solver (the paper's primary contribution).
+
+Layers: smoothing (smax/smin), operators (implicit graph LinOps),
+mwu (Algorithms 1-2), stepsize (Algorithm 3 + Newton), feasibility
+(optimization via binary search), gradient_descent (MPCSolver baseline),
+mwu_dist (2-D distributed solver, paper §5.2).
+"""
+from .mwu import MWUOptions, MWUResult, Status, solve, solve_traced
+from .operators import (
+    AdjacencyPlusId,
+    Coo,
+    Dense,
+    Incidence,
+    InterweavedId,
+    LinOp,
+    OnesRow,
+    ScaledRows,
+    Transposed,
+    VertexEdgePair,
+    VStack,
+)
+from .feasibility import (
+    BinarySearchResult,
+    densest_subgraph_search,
+    maximize_packing,
+    minimize_covering,
+)
+from .gradient_descent import MPCOptions, mpc_solve
+
+__all__ = [
+    "MWUOptions",
+    "MWUResult",
+    "Status",
+    "solve",
+    "solve_traced",
+    "LinOp",
+    "Dense",
+    "Coo",
+    "Incidence",
+    "AdjacencyPlusId",
+    "VertexEdgePair",
+    "InterweavedId",
+    "Transposed",
+    "ScaledRows",
+    "OnesRow",
+    "VStack",
+    "BinarySearchResult",
+    "maximize_packing",
+    "minimize_covering",
+    "densest_subgraph_search",
+    "MPCOptions",
+    "mpc_solve",
+]

@@ -1,0 +1,204 @@
+"""Optimization via feasibility + binary search (paper §2.2, §3).
+
+MWU solves *feasibility* mixed packing/covering LPs. Optimization
+problems are reduced to a sequence of feasibility questions by embedding
+the objective as one extra constraint row and binary-searching its bound:
+
+* pure packing    max <c,x> : Px <= 1   ->  add covering row <c,x>/M >= 1
+* pure covering   min <c,x> : Cx >= 1   ->  add packing  row <c,x>/M <= 1
+* densest subgraph: binary search the density bound D of the dual (15).
+
+Because there is a single objective row, smin (resp. smax) over it is
+*exact*, which the theory rewards with a 2x step scale (handled by
+``MWUOptions.pure`` auto-detection).
+
+Beyond-paper note (DESIGN.md §5): the binary-search branches are
+independent feasibility solves, so at pod scale the ``pod`` mesh axis can
+evaluate different bounds concurrently; here the reference driver runs
+them sequentially exactly as the paper does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .mwu import MWUOptions, MWUResult, Status, solve
+from .operators import LinOp, OnesRow, ScaledRows
+
+__all__ = [
+    "BinarySearchResult",
+    "maximize_packing",
+    "minimize_covering",
+    "densest_subgraph_search",
+]
+
+
+@dataclass
+class BinarySearchResult:
+    x: np.ndarray  # best feasible solution found (original variable space)
+    objective: float  # certified objective value of x (after 1+eps rescale)
+    bound: float  # final binary-search bound
+    feasibility_calls: int
+    mwu_iters_total: int
+    ls_probes_total: int
+    last_result: MWUResult | None = None
+
+    @property
+    def found(self):
+        return self.x is not None
+
+
+def _bsearch(check: Callable[[float], tuple[bool, MWUResult]], lo: float, hi: float, rel_tol: float):
+    """Generic geometric binary search; check(bound) -> (feasible, result).
+
+    Maintains lo = best known feasible-side bound, hi = infeasible side
+    (direction depends on the caller's convention).
+    """
+    calls = iters = probes = 0
+    best = None
+    while hi / max(lo, 1e-300) > 1.0 + rel_tol and calls < 64:
+        mid = float(np.sqrt(lo * hi))
+        ok, res = check(mid)
+        calls += 1
+        iters += int(res.iters)
+        probes += int(res.ls_probes)
+        if ok:
+            lo, best = mid, res
+        else:
+            hi = mid
+    return lo, hi, best, calls, iters, probes
+
+
+def maximize_packing(
+    P: LinOp,
+    c: jnp.ndarray,
+    lo: float,
+    hi: float,
+    opts: MWUOptions = MWUOptions(),
+    rel_tol: float | None = None,
+) -> BinarySearchResult:
+    """max <c, x>  s.t.  P x <= 1, x >= 0.
+
+    ``lo`` must be an achievable objective value, ``hi`` an upper bound
+    (from a combinatorial heuristic, see graphs/baselines.py).
+    Feasible at M means objective >= M is reachable with Px <= (1+eps);
+    dividing x by (1+eps) certifies objective >= M/(1+eps).
+
+    The bound search runs at eps/2 so its granularity does not compound
+    the solver's eps past the paper's acceptance band.
+    """
+    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
+    c = jnp.asarray(c)
+
+    def check(M):
+        C = OnesRow(c=c, inv_bound=jnp.asarray(1.0 / M, c.dtype))
+        res = solve(P, C, opts)
+        return bool(res.status == Status.FEASIBLE), res
+
+    lo2, hi2, best, calls, iters, probes = _bsearch(check, lo, hi, rel_tol)
+    if best is None:  # even `lo` failed as a strict bound; retry at lo
+        ok, best = check(lo)
+        calls += 1
+        iters += int(best.iters)
+        probes += int(best.ls_probes)
+        if not ok:
+            return BinarySearchResult(None, 0.0, lo, calls, iters, probes, best)
+    scale = 1.0 + float(best.max_px - 1.0) if float(best.max_px) > 1.0 else 1.0
+    x = np.asarray(best.x) / scale
+    obj = float(jnp.dot(c, jnp.asarray(x)))
+    return BinarySearchResult(x, obj, lo2, calls, iters, probes, best)
+
+
+def minimize_covering(
+    C: LinOp,
+    c: jnp.ndarray,
+    lo: float,
+    hi: float,
+    opts: MWUOptions = MWUOptions(),
+    rel_tol: float | None = None,
+) -> BinarySearchResult:
+    """min <c, x>  s.t.  C x >= 1, x >= 0.
+
+    Feasible at M certifies opt <= M (1+eps); infeasible certifies opt > M.
+    Searches the smallest feasible M in [lo, hi] at eps/2 granularity.
+    """
+    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
+    c = jnp.asarray(c)
+    calls = iters = probes = 0
+    best = None
+    best_M = hi
+
+    def check(M):
+        P = OnesRow(c=c, inv_bound=jnp.asarray(1.0 / M, c.dtype))
+        res = solve(P, C, opts)
+        return bool(res.status == Status.FEASIBLE), res
+
+    lo_b, hi_b = lo, hi
+    # invariant: hi_b feasible (checked first), lo_b infeasible-or-unknown
+    ok, res = check(hi_b)
+    calls += 1
+    iters += int(res.iters)
+    probes += int(res.ls_probes)
+    if not ok:
+        return BinarySearchResult(None, 0.0, hi_b, calls, iters, probes, res)
+    best, best_M = res, hi_b
+    while hi_b / max(lo_b, 1e-300) > 1.0 + rel_tol and calls < 64:
+        mid = float(np.sqrt(lo_b * hi_b))
+        ok, res = check(mid)
+        calls += 1
+        iters += int(res.iters)
+        probes += int(res.ls_probes)
+        if ok:
+            hi_b, best, best_M = mid, res, mid
+        else:
+            lo_b = mid
+    x = np.asarray(best.x)
+    # covering slack is free objective: x/min(Cx) still satisfies Cx >= 1
+    slack = max(float(best.min_cx), 1.0)
+    x = x / slack
+    obj = float(jnp.dot(c, jnp.asarray(x)))
+    return BinarySearchResult(x, obj, best_M, calls, iters, probes, best)
+
+
+def densest_subgraph_search(
+    make_PC: Callable[[float], tuple[LinOp, LinOp]],
+    lo: float,
+    hi: float,
+    opts: MWUOptions = MWUOptions(),
+    rel_tol: float | None = None,
+) -> BinarySearchResult:
+    """min D s.t. the dual feasibility LP (15) is feasible.
+
+    ``make_PC(D)`` builds (P, C) = (O/D, W). Feasible iff D >= rho*
+    (the maximum density), so we search the smallest feasible D
+    (eps/2 granularity; see minimize_covering).
+    """
+    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
+    calls = iters = probes = 0
+
+    def check(D):
+        P, C = make_PC(D)
+        res = solve(P, C, opts)
+        return bool(res.status == Status.FEASIBLE), res
+
+    ok, best = check(hi)
+    calls += 1
+    iters += int(best.iters)
+    probes += int(best.ls_probes)
+    if not ok:
+        return BinarySearchResult(None, 0.0, hi, calls, iters, probes, best)
+    lo_b, hi_b, best_D = lo, hi, hi
+    while hi_b / max(lo_b, 1e-300) > 1.0 + rel_tol and calls < 64:
+        mid = float(np.sqrt(lo_b * hi_b))
+        ok, res = check(mid)
+        calls += 1
+        iters += int(res.iters)
+        probes += int(res.ls_probes)
+        if ok:
+            hi_b, best, best_D = mid, res, mid
+        else:
+            lo_b = mid
+    return BinarySearchResult(np.asarray(best.x), best_D, best_D, calls, iters, probes, best)

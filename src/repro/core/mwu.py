@@ -1,0 +1,292 @@
+"""MWU solver for mixed packing & covering LPs (paper Algorithms 1-2).
+
+Feasibility problem (paper eq. 2):
+
+    exists x >= 0  with  P x <= 1  and  C x >= 1,
+
+P, C entrywise nonnegative ``LinOp``s. The solver returns a
+(1+eps)-relative solution (P x <= (1+eps) 1, C x >= 1) or reports
+INFEASIBLE, in O~(eps^-3) iterations (eps^-2 for pure problems).
+
+Two drivers share one iteration body:
+
+* ``solve``        — the production path: a single ``jax.jit``ted
+                     ``lax.while_loop`` (the whole solve is one XLA
+                     program; all vector work between the two SpMVs of an
+                     iteration fuses, which is the XLA analogue of the
+                     paper's §5.1.3 loop fusion).
+* ``solve_traced`` — python-stepped variant that records per-iteration
+                     diagnostics (max violation, alpha, probes) for the
+                     Figure-3 convergence studies.
+
+State kept across iterations (paper Alg. 2 lines 3, 10, 15): x and the
+constraint images y = Px, z = Cx and step images d_y = Pd, d_z = Cd, so
+each iteration performs exactly two pairs of SpMVs (P/Pᵀ, C/Cᵀ) — never
+recomputing Px from scratch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .operators import LinOp
+from .smoothing import smax_and_weights, smin_and_weights
+from .stepsize import STEP_RULES, StepSizeResult
+
+__all__ = ["MWUOptions", "MWUResult", "Status", "solve", "solve_traced", "init_x", "make_eta"]
+
+
+class Status:
+    RUNNING = 0
+    FEASIBLE = 1
+    INFEASIBLE = 2
+    ITER_LIMIT = 3
+
+    NAMES = {0: "RUNNING", 1: "FEASIBLE", 2: "INFEASIBLE", 3: "ITER_LIMIT"}
+
+
+@dataclass(frozen=True)
+class MWUOptions:
+    """Static solver configuration (hashable -> usable as jit static arg)."""
+
+    eps: float = 0.1
+    max_iter: int = 5000  # paper §6.2
+    step_rule: str = "newton"  # "std" | "binary" | "newton"
+    ls_eps: float | None = None  # line-search relative tolerance (default: eps)
+    eta_factor: float = 10.0  # eta = eta_factor * log(m) / eps (paper line 2)
+    pure: bool | None = None  # None = auto-detect single-row objective embedding
+    # packing slack accepted at termination; the theory gives (1+eps).
+    check_packing: bool = True
+
+    def resolve_pure(self, P: LinOp, C: LinOp) -> bool:
+        if self.pure is not None:
+            return self.pure
+        return P.shape[0] == 1 or C.shape[0] == 1
+
+    @property
+    def ls_tol(self) -> float:
+        return self.eps if self.ls_eps is None else self.ls_eps
+
+
+class MWUResult(NamedTuple):
+    x: jax.Array
+    status: jax.Array  # int32 Status code
+    iters: jax.Array  # MWU iterations executed
+    ls_probes: jax.Array  # total line-search probes (Table 3)
+    max_px: jax.Array  # max_i (Px)_i at exit
+    min_cx: jax.Array  # min_i (Cx)_i at exit
+
+    @property
+    def feasible(self):
+        return self.status == Status.FEASIBLE
+
+
+def make_eta(m: int, eps: float, eta_factor: float = 10.0):
+    return eta_factor * np.log(max(m, 2)) / eps
+
+
+def init_x(P: LinOp, eps: float, dtype) -> jax.Array:
+    """x_i = eps / (n * ||P_{:,i}||_inf)  (paper Alg. 1 line 3).
+
+    Guarantees every packing row starts at most eps. Columns absent from P
+    (colmax = 0) would start unbounded; they are clamped to the max of the
+    present columns' scale (only well-posed LPs reach us in practice).
+    """
+    n = P.shape[1]
+    cm = P.colmax().astype(dtype)
+    safe = jnp.where(cm > 0, cm, jnp.inf)
+    x = eps / (n * safe)
+    fallback = jnp.min(jnp.where(cm > 0, x, jnp.inf))
+    fallback = jnp.where(jnp.isfinite(fallback), fallback, eps / n)
+    return jnp.where(cm > 0, x, fallback).astype(dtype)
+
+
+class _Carry(NamedTuple):
+    x: jax.Array
+    y: jax.Array
+    z: jax.Array
+    it: jax.Array
+    probes: jax.Array
+    alpha_prev: jax.Array
+    status: jax.Array
+
+
+def _masked_min(v, mask):
+    return jnp.min(v) if mask is None else jnp.min(jnp.where(mask, v, jnp.inf))
+
+
+def _masked_max(v, mask):
+    return jnp.max(v) if mask is None else jnp.max(jnp.where(mask, v, -jnp.inf))
+
+
+def _iteration(P: LinOp, C: LinOp, eta, scale, step_fn, ls_eps, p_mask, c_mask, carry: _Carry) -> _Carry:
+    """One MWU iteration (Alg. 2 body). Returns the updated carry."""
+    x, y, z = carry.x, carry.y, carry.z
+    dt = x.dtype
+    tiny = jnp.asarray(jnp.finfo(dt).tiny, dt)
+
+    # gradients of the smoothed constraint potentials (lines 5-6)
+    _, wp = smax_and_weights(y, eta, where=p_mask)
+    _, wc = smin_and_weights(z, eta, where=c_mask)
+    g = P.rmatvec(wp)  # packing gradient  P^T grad smax(Px)
+    h = C.rmatvec(wc)  # covering gradient C^T grad smin(Cx)
+
+    # step direction (line 7): d_i = scale * max(0, 1 - g_i/h_i) * x_i
+    ratio = jnp.where(h > tiny, g / jnp.maximum(h, tiny), jnp.inf)
+    d = scale * jnp.maximum(0.0, 1.0 - ratio) * x
+
+    max_d = jnp.max(d)
+    infeasible_dir = max_d <= 0  # line 8
+
+    # step images (line 10) — the second SpMV pair
+    dy = P.matvec(d)
+    dz = C.matvec(d)
+
+    # step size (line 11)
+    ss: StepSizeResult = step_fn(y, z, dy, dz, eta, p_mask, c_mask, ls_eps, carry.alpha_prev)
+    infeasible_alpha = ss.alpha < 1  # line 12
+
+    # apply (lines 14-15); never move on a terminal iteration
+    bad = infeasible_dir | infeasible_alpha
+    aa = jnp.where(bad, 0.0, ss.alpha).astype(dt)
+    x2 = x + aa * d
+    y2 = y + aa * dy
+    z2 = z + aa * dz
+
+    status = jnp.where(
+        infeasible_dir | infeasible_alpha,
+        jnp.int32(Status.INFEASIBLE),
+        jnp.int32(Status.RUNNING),
+    )
+    return _Carry(
+        x=x2,
+        y=y2,
+        z=z2,
+        it=carry.it + 1,
+        probes=carry.probes + ss.probes,
+        alpha_prev=jnp.where(bad, carry.alpha_prev, ss.alpha.astype(dt)),
+        status=status,
+    )
+
+
+def _finalize(opts: MWUOptions, carry: _Carry, p_mask, c_mask) -> MWUResult:
+    max_px = _masked_max(carry.y, p_mask)
+    min_cx = _masked_min(carry.z, c_mask)
+    covered = min_cx >= 1.0
+    packed = (max_px <= 1.0 + opts.eps + 1e-9) | (not opts.check_packing)
+    status = jnp.where(
+        carry.status == Status.INFEASIBLE,
+        jnp.int32(Status.INFEASIBLE),
+        jnp.where(
+            covered & packed,
+            jnp.int32(Status.FEASIBLE),
+            jnp.int32(Status.ITER_LIMIT),
+        ),
+    )
+    return MWUResult(
+        x=carry.x,
+        status=status,
+        iters=carry.it,
+        ls_probes=carry.probes,
+        max_px=max_px,
+        min_cx=min_cx,
+    )
+
+
+@partial(jax.jit, static_argnames=("opts", "has_p_mask", "has_c_mask"))
+def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask):
+    pm = p_mask if has_p_mask else None
+    cm = c_mask if has_c_mask else None
+
+    m = P.shape[0] + C.shape[0]
+    dt = jnp.promote_types(P.colmax().dtype, C.colmax().dtype)
+    dt = dt if jnp.issubdtype(dt, jnp.floating) else jnp.float32
+    eta = jnp.asarray(make_eta(m, opts.eps, opts.eta_factor), dt)
+    # pure packing/covering admit a 2x larger step scale (paper §2.2)
+    scale = (1.0 if opts.resolve_pure(P, C) else 0.5) / eta
+    step_fn = STEP_RULES[opts.step_rule]
+
+    x0 = init_x(P, opts.eps, dt)
+    carry0 = _Carry(
+        x=x0,
+        y=P.matvec(x0).astype(dt),
+        z=C.matvec(x0).astype(dt),
+        it=jnp.zeros((), jnp.int32),
+        probes=jnp.zeros((), jnp.int32),
+        alpha_prev=jnp.ones((), dt),
+        status=jnp.int32(Status.RUNNING),
+    )
+
+    def cond(carry: _Carry):
+        done_cover = _masked_min(carry.z, cm) >= 1.0
+        return (
+            (carry.status == Status.RUNNING)
+            & (~done_cover)
+            & (carry.it < opts.max_iter)
+        )
+
+    body = partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, pm, cm)
+    carry = jax.lax.while_loop(cond, body, carry0)
+    return _finalize(opts, carry, pm, cm)
+
+
+def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None) -> MWUResult:
+    """Solve the feasibility LP  P x <= 1, C x >= 1, x >= 0  (fully jitted)."""
+    # Pass dummies for masks so the jit signature stays pytree-stable.
+    hp, hc = p_mask is not None, c_mask is not None
+    pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
+    cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
+    return _solve_impl(P, C, opts, pm, cmk, hp, hc)
+
+
+def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None):
+    """Python-stepped solve recording per-iteration diagnostics (Fig. 3).
+
+    Returns (MWUResult, trace) with trace = dict of numpy arrays:
+    ``max_violation`` = max(0, max(Px)-1, 1-min(Cx)), ``alpha``, ``probes``.
+    """
+    m = P.shape[0] + C.shape[0]
+    x0 = init_x(P, opts.eps, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    dt = x0.dtype
+    eta = jnp.asarray(make_eta(m, opts.eps, opts.eta_factor), dt)
+    scale = (1.0 if opts.resolve_pure(P, C) else 0.5) / eta
+    step_fn = STEP_RULES[opts.step_rule]
+
+    body = jax.jit(partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, p_mask, c_mask))
+
+    carry = _Carry(
+        x=x0,
+        y=P.matvec(x0).astype(dt),
+        z=C.matvec(x0).astype(dt),
+        it=jnp.zeros((), jnp.int32),
+        probes=jnp.zeros((), jnp.int32),
+        alpha_prev=jnp.ones((), dt),
+        status=jnp.int32(Status.RUNNING),
+    )
+    viol, alphas, probes = [], [], []
+    last_probes = 0
+    for _ in range(opts.max_iter):
+        mx = float(_masked_max(carry.y, p_mask))
+        mn = float(_masked_min(carry.z, c_mask))
+        viol.append(max(0.0, mx - 1.0, 1.0 - mn))
+        if mn >= 1.0 or int(carry.status) != Status.RUNNING:
+            break
+        prev_alpha = float(carry.alpha_prev)
+        carry = body(carry)
+        alphas.append(float(carry.alpha_prev))
+        probes.append(int(carry.probes) - last_probes)
+        last_probes = int(carry.probes)
+
+    res = _finalize(opts, carry, p_mask, c_mask)
+    trace = {
+        "max_violation": np.asarray(viol),
+        "alpha": np.asarray(alphas),
+        "probes": np.asarray(probes),
+    }
+    return res, trace

@@ -1,0 +1,492 @@
+"""Linear operators for positive LPs (paper §3 + §5.1.2).
+
+The paper's key software contribution is *implicit* representations of the
+constraint matrices that arise in graph LPs:
+
+* ``Incidence``        M  (|V| x |E|)  — matching / bmatch packing rows,
+                                          transposed for vertex-cover.
+* ``AdjacencyPlusId``  I+A (|V| x |V|) — dominating-set covering rows.
+* ``VertexEdgePair``   O  (|V| x 2|E|) — densest-subgraph packing rows.
+* ``InterweavedId``    W  (|E| x 2|E|) — densest-subgraph covering rows.
+
+All of these are fully described by the edge list ``(u[k], v[k])`` of the
+underlying graph — storing them explicitly would double (M) or quadruple
+(O, W) the memory traffic. Products with the operator are segment
+accumulations (scatter-add over endpoints); products with the transpose
+are gathers (``w[u] + w[v]``), which is the direction the paper fuses.
+
+TPU adaptation (DESIGN.md §3): the scatter direction lowers to XLA
+scatter-add over a sorted edge list; the gather direction is a fused
+Pallas kernel (`repro.kernels.incidence_gather`) with this module's jnp
+implementation as its oracle.
+
+Operators are registered pytrees, so they can be passed straight through
+``jax.jit`` / ``lax.while_loop`` carries; shape metadata is static.
+
+Conventions
+-----------
+* All operators are entrywise nonnegative (positive-LP requirement).
+* ``matvec``:  (n,) -> (m,);  ``rmatvec``: (m,) -> (n,)  for an m x n op.
+* ``colmax()`` returns per-column max entry (used for MWU's x init);
+  ``colmax(row_scale)`` returns ``max_i row_scale[i] * A[i, j]`` which is
+  what scaled wrappers need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "LinOp",
+    "Dense",
+    "Coo",
+    "Incidence",
+    "AdjacencyPlusId",
+    "VertexEdgePair",
+    "InterweavedId",
+    "Transposed",
+    "ScaledRows",
+    "OnesRow",
+    "VStack",
+    "register_op",
+]
+
+
+def register_op(cls):
+    """Register a LinOp dataclass as a pytree (array fields = leaves)."""
+    fields = dataclasses.fields(cls)
+    leaf_names = [f.name for f in fields if not f.metadata.get("static", False)]
+    static_names = [f.name for f in fields if f.metadata.get("static", False)]
+
+    def flatten(op):
+        return (
+            tuple(getattr(op, n) for n in leaf_names),
+            tuple(getattr(op, n) for n in static_names),
+        )
+
+    def unflatten(aux, leaves):
+        kwargs = dict(zip(leaf_names, leaves))
+        kwargs.update(dict(zip(static_names, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+class LinOp:
+    """Abstract nonnegative linear operator."""
+
+    #: (rows, cols)
+    shape: tuple[int, int]
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def rmatvec(self, y: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def colmax(self, row_scale: jax.Array | None = None) -> jax.Array:
+        raise NotImplementedError
+
+    # nnz as stored (implicit ops report the implicit nonzero count)
+    @property
+    def nnz(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def T(self) -> "LinOp":
+        return Transposed(self)
+
+    def materialize(self) -> jax.Array:
+        """Dense (m, n) matrix — for tests/small problems only."""
+        n = self.shape[1]
+        return jax.vmap(self.matvec, in_axes=1, out_axes=1)(jnp.eye(n))
+
+
+@register_op
+@dataclass
+class Dense(LinOp):
+    """Explicit dense matrix (tests, tiny LPs, scipy cross-checks)."""
+
+    mat: jax.Array
+
+    @property
+    def shape(self):
+        return tuple(self.mat.shape)
+
+    def matvec(self, x):
+        return self.mat @ x
+
+    def rmatvec(self, y):
+        return self.mat.T @ y
+
+    def colmax(self, row_scale=None):
+        m = self.mat if row_scale is None else self.mat * row_scale[:, None]
+        return jnp.max(m, axis=0)
+
+    @property
+    def nnz(self):
+        return int(np.prod(self.mat.shape))
+
+    def materialize(self):
+        return self.mat
+
+
+@register_op
+@dataclass
+class Coo(LinOp):
+    """Padded COO: the generic explicit-sparse fallback (the "PETSc" path).
+
+    Padding entries must carry ``val == 0`` and any in-range indices.
+    """
+
+    rows: jax.Array  # (nnz,) int32
+    cols: jax.Array  # (nnz,) int32
+    vals: jax.Array  # (nnz,)
+    _shape: tuple[int, int] = static_field(default=(0, 0))
+
+    @property
+    def shape(self):
+        return self._shape
+
+    def matvec(self, x):
+        out = jnp.zeros((self._shape[0],), dtype=x.dtype)
+        return out.at[self.rows].add(self.vals.astype(x.dtype) * x[self.cols])
+
+    def rmatvec(self, y):
+        out = jnp.zeros((self._shape[1],), dtype=y.dtype)
+        return out.at[self.cols].add(self.vals.astype(y.dtype) * y[self.rows])
+
+    def colmax(self, row_scale=None):
+        v = self.vals
+        if row_scale is not None:
+            v = v * row_scale[self.rows]
+        out = jnp.zeros((self._shape[1],), dtype=v.dtype)
+        return out.at[self.cols].max(v)
+
+    @property
+    def nnz(self):
+        return int(self.rows.shape[0])
+
+
+@register_op
+@dataclass
+class Incidence(LinOp):
+    """Vertex-edge incidence matrix M (eq. 4): M[u, e] = 1 iff u in e.
+
+    Stored implicitly as the edge list. Optional per-edge weights scale
+    the column (both endpoints share the weight — weighted graphs).
+    ``edge_mask`` zeroes padded edges (distributed layouts pad).
+    """
+
+    u: jax.Array  # (E,) int32 endpoint 0
+    v: jax.Array  # (E,) int32 endpoint 1
+    n_vertices: int = static_field(default=0)
+    weights: Any = None  # optional (E,)
+    edge_mask: Any = None  # optional (E,) bool
+
+    @property
+    def shape(self):
+        return (self.n_vertices, int(self.u.shape[0]))
+
+    def _w(self, dtype):
+        E = self.u.shape[0]
+        w = jnp.ones((E,), dtype) if self.weights is None else self.weights.astype(dtype)
+        if self.edge_mask is not None:
+            w = jnp.where(self.edge_mask, w, 0)
+        return w
+
+    def matvec(self, x):
+        # y_u += x_e ; y_v += x_e  (scatter direction)
+        xw = x * self._w(x.dtype)
+        out = jnp.zeros((self.n_vertices,), dtype=x.dtype)
+        return out.at[self.u].add(xw).at[self.v].add(xw)
+
+    def rmatvec(self, y):
+        # g_e = y_u + y_v  (gather direction — Pallas hot spot)
+        return (y[self.u] + y[self.v]) * self._w(y.dtype)
+
+    def colmax(self, row_scale=None):
+        w = self._w(jnp.float32 if row_scale is None else row_scale.dtype)
+        if row_scale is None:
+            return w
+        return jnp.maximum(row_scale[self.u], row_scale[self.v]) * w
+
+    @property
+    def nnz(self):
+        return 2 * int(self.u.shape[0])
+
+
+@register_op
+@dataclass
+class AdjacencyPlusId(LinOp):
+    """(I + A) for dominating set (eq. 8). Symmetric; edges stored once."""
+
+    u: jax.Array
+    v: jax.Array
+    n_vertices: int = static_field(default=0)
+    edge_mask: Any = None
+
+    @property
+    def shape(self):
+        return (self.n_vertices, self.n_vertices)
+
+    def _mask(self, x, dtype):
+        if self.edge_mask is None:
+            return x
+        return jnp.where(self.edge_mask, x, jnp.zeros((), dtype))
+
+    def matvec(self, x):
+        xu = self._mask(x[self.u], x.dtype)
+        xv = self._mask(x[self.v], x.dtype)
+        out = x  # identity part
+        return out.at[self.u].add(xv).at[self.v].add(xu)
+
+    def rmatvec(self, y):
+        return self.matvec(y)  # symmetric
+
+    def colmax(self, row_scale=None):
+        if row_scale is None:
+            return jnp.ones((self.n_vertices,), jnp.float32)
+        # column j: entries at rows {j} ∪ N(j) -> max of row_scale there.
+        out = row_scale  # identity entry
+        su = self._mask(row_scale[self.u], row_scale.dtype)
+        sv = self._mask(row_scale[self.v], row_scale.dtype)
+        return out.at[self.u].max(sv).at[self.v].max(su)
+
+    @property
+    def nnz(self):
+        return self.n_vertices + 2 * int(self.u.shape[0])
+
+
+@register_op
+@dataclass
+class VertexEdgePair(LinOp):
+    """Vertex-edge-pair matrix O (eq. 14): (|V| x 2|E|).
+
+    Column 2e   has a 1 at row u for edge e = (u, v);
+    column 2e+1 has a 1 at row v. Variables z are laid out interleaved,
+    matching the paper's (13)/(14); we view z as (E, 2).
+    """
+
+    u: jax.Array
+    v: jax.Array
+    n_vertices: int = static_field(default=0)
+    edge_mask: Any = None
+
+    @property
+    def shape(self):
+        return (self.n_vertices, 2 * int(self.u.shape[0]))
+
+    def _m(self, x, dtype):
+        if self.edge_mask is None:
+            return x
+        return jnp.where(self.edge_mask, x, jnp.zeros((), dtype))
+
+    def matvec(self, z):
+        z2 = z.reshape(-1, 2)
+        zu = self._m(z2[:, 0], z.dtype)
+        zv = self._m(z2[:, 1], z.dtype)
+        out = jnp.zeros((self.n_vertices,), dtype=z.dtype)
+        return out.at[self.u].add(zu).at[self.v].add(zv)
+
+    def rmatvec(self, y):
+        g = jnp.stack([y[self.u], y[self.v]], axis=-1)
+        if self.edge_mask is not None:
+            g = jnp.where(self.edge_mask[:, None], g, 0)
+        return g.reshape(-1)
+
+    def colmax(self, row_scale=None):
+        E = int(self.u.shape[0])
+        if row_scale is None:
+            return jnp.ones((2 * E,), jnp.float32)
+        return self.rmatvec(row_scale)
+
+    @property
+    def nnz(self):
+        return 2 * int(self.u.shape[0])
+
+
+@register_op
+@dataclass
+class InterweavedId(LinOp):
+    """Interweaved identity W (eq. 13): (|E| x 2|E|), W[e, 2e] = W[e, 2e+1] = 1."""
+
+    n_edges: int = static_field(default=0)
+    edge_mask: Any = None
+
+    @property
+    def shape(self):
+        return (self.n_edges, 2 * self.n_edges)
+
+    def matvec(self, z):
+        out = z.reshape(-1, 2).sum(axis=-1)
+        if self.edge_mask is not None:
+            out = jnp.where(self.edge_mask, out, 0)
+        return out
+
+    def rmatvec(self, y):
+        if self.edge_mask is not None:
+            y = jnp.where(self.edge_mask, y, 0)
+        return jnp.repeat(y, 2, total_repeat_length=2 * self.n_edges)
+
+    def colmax(self, row_scale=None):
+        if row_scale is None:
+            return jnp.ones((2 * self.n_edges,), jnp.float32)
+        return self.rmatvec(row_scale)
+
+    @property
+    def nnz(self):
+        return 2 * self.n_edges
+
+
+@register_op
+@dataclass
+class Transposed(LinOp):
+    """Lazy transpose wrapper (vertex cover uses M^T)."""
+
+    inner: LinOp
+
+    @property
+    def shape(self):
+        m, n = self.inner.shape
+        return (n, m)
+
+    def matvec(self, x):
+        return self.inner.rmatvec(x)
+
+    def rmatvec(self, y):
+        return self.inner.matvec(y)
+
+    def colmax(self, row_scale=None):
+        # columns of A^T are rows of A: colmax_j = max_i s_i A^T[i,j]
+        #                                        = max_i s_i A[j,i] -> rowmax of scaled A
+        if row_scale is None:
+            # max over each row of A == A @ onehot trick; use matvec with
+            # (max,*) semiring replacement: for 0/1 implicit ops a row max is
+            # 1 wherever the row is nonempty. Generic fallback:
+            return _rowmax(self.inner, None)
+        return _rowmax(self.inner, row_scale)
+
+    @property
+    def nnz(self):
+        return self.inner.nnz
+
+
+def _rowmax(op: LinOp, col_scale):
+    """max_j op[i, j] * col_scale[j] for each row i (semiring max-product)."""
+    if isinstance(op, Dense):
+        m = op.mat if col_scale is None else op.mat * col_scale[None, :]
+        return jnp.max(m, axis=1)
+    if isinstance(op, Coo):
+        v = op.vals if col_scale is None else op.vals * col_scale[op.cols]
+        return jnp.zeros((op.shape[0],), v.dtype).at[op.rows].max(v)
+    if isinstance(op, Incidence):
+        w = op._w(jnp.float32 if col_scale is None else col_scale.dtype)
+        cw = w if col_scale is None else w * col_scale
+        out = jnp.zeros((op.n_vertices,), cw.dtype)
+        return out.at[op.u].max(cw).at[op.v].max(cw)
+    raise NotImplementedError(f"rowmax for {type(op).__name__}")
+
+
+@register_op
+@dataclass
+class ScaledRows(LinOp):
+    """diag(scale) @ inner — used to normalize b-vectors to all-ones."""
+
+    scale: jax.Array  # (m,)
+    inner: LinOp
+
+    @property
+    def shape(self):
+        return self.inner.shape
+
+    def matvec(self, x):
+        return self.scale * self.inner.matvec(x)
+
+    def rmatvec(self, y):
+        return self.inner.rmatvec(self.scale * y)
+
+    def colmax(self, row_scale=None):
+        s = self.scale if row_scale is None else self.scale * row_scale
+        return self.inner.colmax(s)
+
+    @property
+    def nnz(self):
+        return self.inner.nnz
+
+
+@register_op
+@dataclass
+class OnesRow(LinOp):
+    """(1/M) * c^T as a single covering/packing row (objective embedding, §2.2)."""
+
+    c: jax.Array  # (n,) nonnegative objective
+    inv_bound: jax.Array  # scalar 1/M
+
+    @property
+    def shape(self):
+        return (1, int(self.c.shape[0]))
+
+    def matvec(self, x):
+        return (self.inv_bound * jnp.dot(self.c, x))[None]
+
+    def rmatvec(self, y):
+        return self.inv_bound * self.c * y[0]
+
+    def colmax(self, row_scale=None):
+        s = self.inv_bound if row_scale is None else self.inv_bound * row_scale[0]
+        return self.c * s
+
+    @property
+    def nnz(self):
+        return int(self.c.shape[0])
+
+
+@register_op
+@dataclass
+class VStack(LinOp):
+    """Row-stack of operators sharing a column space."""
+
+    ops: tuple  # tuple[LinOp, ...]
+
+    @property
+    def shape(self):
+        return (sum(o.shape[0] for o in self.ops), self.ops[0].shape[1])
+
+    def matvec(self, x):
+        return jnp.concatenate([o.matvec(x) for o in self.ops])
+
+    def rmatvec(self, y):
+        out = None
+        off = 0
+        for o in self.ops:
+            m = o.shape[0]
+            r = o.rmatvec(jax.lax.dynamic_slice_in_dim(y, off, m))
+            out = r if out is None else out + r
+            off += m
+        return out
+
+    def colmax(self, row_scale=None):
+        out = None
+        off = 0
+        for o in self.ops:
+            m = o.shape[0]
+            rs = None if row_scale is None else jax.lax.dynamic_slice_in_dim(row_scale, off, m)
+            c = o.colmax(rs)
+            out = c if out is None else jnp.maximum(out, c)
+            off += m
+        return out
+
+    @property
+    def nnz(self):
+        return sum(o.nnz for o in self.ops)

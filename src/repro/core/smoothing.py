@@ -1,0 +1,102 @@
+"""Smoothed max/min and their gradients (paper §2.2).
+
+    smax_eta(v) = (1/eta) * log(sum_i exp(eta * v_i))
+    smin_eta(v) = -(1/eta) * log(sum_i exp(-eta * v_i))
+
+with gradients
+
+    grad smax_eta(v) = softmax(eta * v)
+    grad smin_eta(v) = softmax(-eta * v)
+
+Everything is computed through shifted logsumexp so that no raw
+``exp(eta * v)`` is ever materialized: at epsilon = 0.1 the paper's
+eta = 10 log(m)/epsilon is ~100 log m, far beyond f32 (and f64) exp range.
+
+For a masked variant (used when covering constraints are conceptually
+dropped, Alg. 1 line 11) a boolean mask selects the active entries; masked
+entries contribute -inf to the logsumexp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "smax",
+    "smin",
+    "smax_weights",
+    "smin_weights",
+    "smax_and_weights",
+    "smin_and_weights",
+    "logsumexp_shifted",
+]
+
+
+def logsumexp_shifted(a: jax.Array, where: jax.Array | None = None):
+    """Stable logsumexp returning (lse, shift) so callers can reuse the shift.
+
+    ``where`` masks entries out of the reduction (treated as -inf).
+    """
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    shift = jnp.max(a)
+    # If everything is -inf (empty mask) keep shift finite to avoid nan.
+    shift = jnp.where(jnp.isfinite(shift), shift, jnp.zeros_like(shift))
+    lse = shift + jnp.log(jnp.sum(jnp.exp(a - shift)))
+    return lse, shift
+
+
+def smax(v: jax.Array, eta, where: jax.Array | None = None) -> jax.Array:
+    """smax_eta(v); scalar. Within log(m)/eta of max(v) from above."""
+    lse, _ = logsumexp_shifted(eta * v, where=where)
+    return lse / eta
+
+
+def smin(v: jax.Array, eta, where: jax.Array | None = None) -> jax.Array:
+    """smin_eta(v); scalar. Within log(m)/eta of min(v) from below."""
+    lse, _ = logsumexp_shifted(-eta * v, where=where)
+    return -lse / eta
+
+
+def smax_weights(v: jax.Array, eta, where: jax.Array | None = None) -> jax.Array:
+    """w_p = grad smax_eta(v) = softmax(eta*v). Sums to 1."""
+    a = eta * v
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    return jax.nn.softmax(a)
+
+
+def smin_weights(v: jax.Array, eta, where: jax.Array | None = None) -> jax.Array:
+    """w_c = grad smin_eta(v) = softmax(-eta*v). Sums to 1."""
+    a = -eta * v
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    return jax.nn.softmax(a)
+
+
+def smax_and_weights(v, eta, where=None):
+    """One-pass (smax, softmax(eta v)) sharing the max-shift.
+
+    This is the math that kernels/softmax_weights fuses into a single
+    HBM sweep on TPU; here it is the XLA reference implementation.
+    """
+    a = eta * v
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    shift = jnp.max(a)
+    shift = jnp.where(jnp.isfinite(shift), shift, jnp.zeros_like(shift))
+    e = jnp.exp(a - shift)
+    s = jnp.sum(e)
+    return (shift + jnp.log(s)) / eta, e / s
+
+
+def smin_and_weights(v, eta, where=None):
+    """One-pass (smin, softmax(-eta v)) sharing the max-shift."""
+    a = -eta * v
+    if where is not None:
+        a = jnp.where(where, a, -jnp.inf)
+    shift = jnp.max(a)
+    shift = jnp.where(jnp.isfinite(shift), shift, jnp.zeros_like(shift))
+    e = jnp.exp(a - shift)
+    s = jnp.sum(e)
+    return -(shift + jnp.log(s)) / eta, e / s

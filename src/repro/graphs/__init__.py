@@ -1,0 +1,32 @@
+"""Graph problems as positive LPs (paper §3) + generators + baselines."""
+from .graph import Graph
+from .generators import bipartite_ratings, erdos, grid2d, kron, rgg
+from .problems import (
+    PROBLEMS,
+    ProblemLP,
+    bmatching_lp,
+    build,
+    densest_subgraph_lp,
+    domset_lp,
+    generalized_matching_lp,
+    matching_lp,
+    vcover_lp,
+)
+
+__all__ = [
+    "Graph",
+    "rgg",
+    "kron",
+    "erdos",
+    "grid2d",
+    "bipartite_ratings",
+    "PROBLEMS",
+    "ProblemLP",
+    "build",
+    "matching_lp",
+    "bmatching_lp",
+    "vcover_lp",
+    "domset_lp",
+    "densest_subgraph_lp",
+    "generalized_matching_lp",
+]

@@ -1,0 +1,172 @@
+"""Graph problems as positive LPs (paper §3).
+
+Each builder returns a :class:`ProblemLP` bundling the implicit operators,
+the objective, binary-search bounds derived from combinatorial heuristics
+(graphs/baselines.py), and a solve() entry point dispatching to the right
+feasibility driver.
+
+| problem    | LP                                   | type          |
+|------------|--------------------------------------|---------------|
+| match      | max 1.x : M x <= 1                   | pure packing  |
+| bmatch     | same, bipartite input                | pure packing  |
+| vcover     | min 1.x : M^T x >= 1                 | pure covering |
+| dom-set    | min 1.x : (I+A) x >= 1               | pure covering |
+| dense-sub  | min D : W z >= 1, O z <= D 1         | mixed, D-search |
+| gen-match  | exists x: M x <= ub, M x >= lb       | mixed feasibility |
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    AdjacencyPlusId,
+    Incidence,
+    InterweavedId,
+    MWUOptions,
+    ScaledRows,
+    Transposed,
+    VertexEdgePair,
+    densest_subgraph_search,
+    maximize_packing,
+    minimize_covering,
+    solve,
+)
+from . import baselines
+from .graph import Graph
+
+__all__ = ["ProblemLP", "matching_lp", "bmatching_lp", "vcover_lp", "domset_lp",
+           "densest_subgraph_lp", "generalized_matching_lp", "build", "PROBLEMS"]
+
+
+@dataclass
+class ProblemLP:
+    name: str
+    kind: str  # "packing" | "covering" | "densest" | "mixed"
+    graph: Graph
+    n_vars: int
+    solve_fn: Callable  # (MWUOptions) -> BinarySearchResult-like
+    lo: float
+    hi: float
+    sense: str  # "max" | "min" | "feasibility"
+    # diagnostics for benchmarks
+    nnz: int = 0
+
+    def solve(self, opts: MWUOptions = MWUOptions()):
+        return self.solve_fn(opts)
+
+
+def matching_lp(g: Graph, name="match") -> ProblemLP:
+    """max <1,x> : Mx <= 1 (eq. 6). Bounds via greedy maximal matching:
+    greedy g_m has nu_int <= 2 g_m, and LP <= 3/2 nu_int <= 3 g_m."""
+    P = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    gm = max(baselines.greedy_maximal_matching(g), 1)
+    lo, hi = float(gm), float(min(3.0 * gm, g.n / 2.0) + 1.0)
+    c = jnp.ones((g.m,))
+
+    def run(opts):
+        return maximize_packing(P, c, lo, hi, opts)
+
+    return ProblemLP(name, "packing", g, g.m, run, lo, hi, "max", nnz=P.nnz)
+
+
+def bmatching_lp(g: Graph) -> ProblemLP:
+    """Bipartite matching: LP is integral (no gap); bounds [g_m, 2 g_m]."""
+    assert g.bipartite_split is not None, "bmatch requires a bipartite graph"
+    P = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    gm = max(baselines.greedy_maximal_matching(g), 1)
+    lo, hi = float(gm), float(2.0 * gm + 1.0)
+    c = jnp.ones((g.m,))
+
+    def run(opts):
+        return maximize_packing(P, c, lo, hi, opts)
+
+    return ProblemLP("bmatch", "packing", g, g.m, run, lo, hi, "max", nnz=P.nnz)
+
+
+def vcover_lp(g: Graph) -> ProblemLP:
+    """min <1,x> : M^T x >= 1 (eq. 10). LP duality: LP(vcover) = LP(match),
+    so greedy matching g_m gives bounds [g_m, 2 g_m]."""
+    C = Transposed(Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n))
+    gm = max(baselines.greedy_maximal_matching(g), 1)
+    lo, hi = max(float(gm) * 0.5, 0.5), float(2.0 * gm)
+    c = jnp.ones((g.n,))
+
+    def run(opts):
+        return minimize_covering(C, c, lo, hi, opts)
+
+    return ProblemLP("vcover", "covering", g, g.n, run, lo, hi, "min", nnz=C.nnz)
+
+
+def domset_lp(g: Graph) -> ProblemLP:
+    """min <1,x> : (I+A) x >= 1 (eq. 8). Greedy set-cover bound:
+    greedy g_d <= (ln(Delta+1)+1) LP  =>  LP in [g_d / (ln(D+1)+1), g_d]."""
+    C = AdjacencyPlusId(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    gd = max(baselines.greedy_dominating_set(g), 1)
+    dmax = int(g.degrees().max(initial=1))
+    lo = max(float(gd) / (np.log(dmax + 1.0) + 1.0) * 0.5, 0.25)
+    hi = float(gd) + 1.0
+    c = jnp.ones((g.n,))
+
+    def run(opts):
+        return minimize_covering(C, c, lo, hi, opts)
+
+    return ProblemLP("dom-set", "covering", g, g.n, run, lo, hi, "min", nnz=C.nnz)
+
+
+def densest_subgraph_lp(g: Graph) -> ProblemLP:
+    """min D : Wz >= 1, Oz <= D (eq. 15). Charikar peel rho_g: rho* in
+    [rho_g, 2 rho_g]; D feasible iff D >= rho*."""
+    u, v = jnp.asarray(g.u), jnp.asarray(g.v)
+    W = InterweavedId(n_edges=g.m)
+    O = VertexEdgePair(u=u, v=v, n_vertices=g.n)
+    rho_g, _ = baselines.charikar_peel(g)
+    rho_g = max(rho_g, 0.5)
+    lo, hi = rho_g * 0.999, 2.0 * rho_g + 1.0
+
+    def make_PC(D):
+        P = ScaledRows(scale=jnp.full((g.n,), 1.0 / D), inner=O)
+        return P, W
+
+    def run(opts):
+        return densest_subgraph_search(make_PC, lo, hi, opts)
+
+    return ProblemLP("dense-sub", "densest", g, 2 * g.m, run, lo, hi, "min",
+                     nnz=W.nnz + O.nnz)
+
+
+def generalized_matching_lp(g: Graph, lb: np.ndarray, ub: np.ndarray):
+    """Feasibility: lb <= M x <= ub, x in [0,1]^m (Appendix A.1).
+
+    Returns (P, C, c_mask) ready for core.solve: rows are normalized to
+    1-RHS (P = diag(1/ub) M ; C = diag(1/lb) M with lb==0 rows masked).
+    The x <= 1 box is appended as packing rows via an identity operator
+    encoded as a Coo.
+    """
+    import jax
+
+    u, v = jnp.asarray(g.u), jnp.asarray(g.v)
+    M = Incidence(u=u, v=v, n_vertices=g.n)
+    ub = np.maximum(np.asarray(ub, np.float64), 1e-12)
+    lb = np.asarray(lb, np.float64)
+    P = ScaledRows(scale=jnp.asarray(1.0 / ub), inner=M)
+    lb_safe = np.where(lb > 0, lb, 1.0)
+    C = ScaledRows(scale=jnp.asarray(1.0 / lb_safe), inner=M)
+    c_mask = jnp.asarray(lb > 0)
+    return P, C, c_mask
+
+
+PROBLEMS = {
+    "match": matching_lp,
+    "bmatch": bmatching_lp,
+    "vcover": vcover_lp,
+    "dom-set": domset_lp,
+    "dense-sub": densest_subgraph_lp,
+}
+
+
+def build(problem: str, g: Graph) -> ProblemLP:
+    return PROBLEMS[problem](g)

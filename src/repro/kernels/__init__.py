@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §4).
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jitted dispatcher: Mosaic on TPU / interpret or XLA elsewhere)
+and ref.py (pure-jnp oracle used by tests/test_kernels.py sweeps):
+
+  softmax_weights  — eta-softmax weights + smoothed max (MWU gradients)
+  incidence_gather — g_e = w[u_e] + w[v_e]  (implicit M^T w, §5.1.2)
+  axpy_reduce      — fused x+alpha*d with min/max reductions (Alg.2 l.14-15)
+  linesearch_probe — fused Phi/Psi/derivative probe (Alg. 3 inner loop)
+  flash_attention  — causal/SWA/GQA streaming attention (plane B prefill)
+"""

@@ -1,0 +1,17 @@
+"""Jitted dispatcher for the fused update (Alg. 2 lines 14-15 + cond)."""
+from functools import partial
+
+import jax
+
+from .kernel import axpy_reduce_pallas
+from .ref import axpy_reduce_ref
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def axpy_reduce(y, dy, alpha, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return axpy_reduce_pallas(y, dy, alpha, interpret=interpret)
+    return axpy_reduce_ref(y, dy, alpha)

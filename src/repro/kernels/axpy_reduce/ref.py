@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for axpy_reduce."""
+import jax.numpy as jnp
+
+
+def axpy_reduce_ref(y, dy, alpha):
+    out = y.astype(jnp.float32) + alpha.astype(jnp.float32) * dy.astype(jnp.float32)
+    return out, jnp.min(out), jnp.max(out)

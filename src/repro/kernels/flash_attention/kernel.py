@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / GQA).
+
+Grid: (batch*kv_heads*group, n_q_blocks, n_kv_blocks) with the kv axis
+innermost (sequential): the kernel keeps a running (m, l, acc) in VMEM
+scratch across kv steps — the classic IO-aware streaming softmax
+(FlashAttention, arXiv:2205.14135), blocked for the MXU with
+(block_q x d) @ (d x block_k) tiles.
+
+Causal + sliding-window masking is positional: q/k tile coordinates are
+derived from program ids, so fully-masked kv blocks past the diagonal
+(or outside the window band) are SKIPPED via pl.when — the 2x triangle
+saving dense XLA attention cannot express (DESIGN.md §4).
+
+GQA is handled by the ops.py wrapper: q heads are folded into the batch
+axis of the grid; the kv block index maps q-batch -> kv-head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(scale, causal, window, block_q, block_k, seq_k,
+                  q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: entirely above the diagonal or outside the window
+    q_last = (qi + 1) * block_q - 1
+    k_first = kj * block_k
+    needed = True
+    if causal:
+        needed = k_first <= q_last
+    if window is not None:
+        q_first = qi * block_q
+        k_last = (kj + 1) * block_k - 1
+        needed = needed & (k_last > q_first - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+        ok = k_pos < seq_k
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, _NEG)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        c = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * c + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * c[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           block_q=512, block_k=512, interpret=True,
+                           true_seq_k=None):
+    """q: (BH, Sq, d); k/v: (BH, Sk, d) — heads already folded into batch.
+
+    Returns (BH, Sq, d). Sq/Sk padded to block multiples by the caller;
+    ``true_seq_k`` masks the padded key tail.
+    """
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = (Sq + block_q - 1) // block_q
+    nk = (Sk + block_k - 1) // block_k
+    scale = float(1.0 / np.sqrt(d))  # python float: no x64 promotion
+
+    kern = functools.partial(
+        _flash_kernel, scale, causal, window, block_q, block_k,
+        Sk if true_seq_k is None else true_seq_k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

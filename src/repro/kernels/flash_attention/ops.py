@@ -1,0 +1,45 @@
+"""Jitted GQA-aware wrapper for the flash attention kernel.
+
+Accepts the model layout (B, S, H, dh) + GQA kv (B, S, Hkv, dh); folds
+(B, Hkv, group) into the kernel's batch axis, pads sequences to block
+multiples, and dispatches Pallas (TPU / interpret) or the XLA reference.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "impl"))
+def flash_attention(q, k, v, positions=None, *, causal=True, window=None,
+                    block_q=512, block_k=512, impl="auto"):
+    """q: (B,S,Hq,dh), k/v: (B,S,Hkv,dh) -> (B,S,Hq,dh)."""
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(B * Hq, S, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(B * Hq, S, dh)
+
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        bq = min(block_q, S)
+        bk = min(block_k, S)
+        pad_q = (bq - S % bq) % bq
+        if pad_q:
+            qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad_q), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad_q), (0, 0)))
+        out = flash_attention_pallas(
+            qf, kf, vf, causal=causal, window=window,
+            block_q=bq, block_k=bk, interpret=interpret, true_seq_k=S,
+        )[:, :S]
+    else:
+        out = flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(B, Hq, S, dh).transpose(0, 2, 1, 3)

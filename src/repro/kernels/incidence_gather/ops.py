@@ -1,0 +1,20 @@
+"""Jitted dispatcher for the incidence gather (M^T w)."""
+from functools import partial
+
+import jax
+
+from .kernel import incidence_gather_pallas
+from .ref import incidence_gather_ref
+
+# beyond this vertex count w no longer fits VMEM single-block
+_VMEM_VERTEX_LIMIT = 3_000_000
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def incidence_gather(u, v, w, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if (jax.default_backend() == "tpu" and w.shape[0] <= _VMEM_VERTEX_LIMIT) else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return incidence_gather_pallas(u, v, w, interpret=interpret)
+    return incidence_gather_ref(u, v, w)

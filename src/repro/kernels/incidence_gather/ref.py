@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for incidence_gather."""
+import jax.numpy as jnp
+
+
+def incidence_gather_ref(u, v, w):
+    w = w.astype(jnp.float32)
+    return w[u] + w[v]

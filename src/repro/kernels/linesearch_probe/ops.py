@@ -1,0 +1,17 @@
+"""Jitted dispatcher for the fused line-search probe."""
+from functools import partial
+
+import jax
+
+from .kernel import linesearch_probe_pallas
+from .ref import linesearch_probe_ref
+
+
+@partial(jax.jit, static_argnames=("sign", "impl"))
+def linesearch_probe(y, dy, alpha, eta, sign: float = 1.0, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return linesearch_probe_pallas(y, dy, alpha, eta, sign=sign, interpret=interpret)
+    return linesearch_probe_ref(y, dy, alpha, eta, sign)

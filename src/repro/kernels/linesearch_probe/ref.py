@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for linesearch_probe."""
+import jax
+import jax.numpy as jnp
+
+
+def linesearch_probe_ref(y, dy, alpha, eta, sign: float = 1.0):
+    y = y.astype(jnp.float32)
+    dy = dy.astype(jnp.float32)
+    v = y + alpha.astype(jnp.float32) * dy
+    a = (sign * eta) * v
+    m = jnp.max(a)
+    e = jnp.exp(a - m)
+    s = jnp.sum(e)
+    lse = m + jnp.log(s)
+    slope = jnp.sum(e * dy) / s
+    return lse, slope, jnp.min(v)

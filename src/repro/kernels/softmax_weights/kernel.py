@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused eta-softmax weights + smoothed max (paper §5.1.3).
+
+Computes, in two HBM sweeps over a length-n vector v:
+
+    lse  = logsumexp(sign * eta * v)         (pass 1: online max/sum)
+    w    = exp(sign * eta * v - lse)         (pass 2: normalized weights)
+
+which yields both smax_eta/smin_eta (= sign * lse / eta) and the MWU
+weight vector grad smax/smin in one fused pipeline — the paper fuses
+exactly this gradient computation on CPU with OpenMP + AVX-512; on TPU
+the tile is an (8, 128)-aligned VMEM block and the reduction carry lives
+in SMEM scratch across a sequential 1-D grid.
+
+Masked (padded) entries are handled by an explicit length argument:
+lanes with global index >= n contribute -inf / 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+SUBLANES = 8
+TILE = SUBLANES * LANES  # 1024 elements per VMEM tile
+
+_NEG = -1e30
+
+
+def _reduce_kernel(n, se_ref, v_ref, out_ref, acc_ref):
+    """Pass 1: running (max m, sum s) over tiles; writes [m, lse] at the end."""
+    i = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = jnp.float32(_NEG)  # running max
+        acc_ref[1] = jnp.float32(0.0)  # running sum (scaled by exp(-m))
+
+    a = v_ref[...].astype(jnp.float32) * se_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
+        jnp.int32, (SUBLANES, LANES), 1
+    )
+    valid = (i * TILE + idx) < n
+    a = jnp.where(valid, a, _NEG)
+
+    m_old = acc_ref[0]
+    s_old = acc_ref[1]
+    m_tile = jnp.max(a)
+    m_new = jnp.maximum(m_old, m_tile)
+    corr = jnp.exp(m_old - m_new)
+    s_new = s_old * corr + jnp.sum(jnp.exp(a - m_new))
+    acc_ref[0] = m_new
+    acc_ref[1] = s_new
+
+    @pl.when(i == nt - 1)
+    def _fin():
+        out_ref[0] = m_new
+        out_ref[1] = m_new + jnp.log(s_new)  # lse
+
+
+def _normalize_kernel(n, se_ref, v_ref, lse_ref, w_ref):
+    """Pass 2: w = exp(sign*eta*v - lse), zero on padded lanes."""
+    i = pl.program_id(0)
+    a = v_ref[...].astype(jnp.float32) * se_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
+        jnp.int32, (SUBLANES, LANES), 1
+    )
+    valid = (i * TILE + idx) < n
+    w = jnp.exp(a - lse_ref[1])
+    w_ref[...] = jnp.where(valid, w, 0.0).astype(w_ref.dtype)
+
+
+def softmax_weights_pallas(v, eta, sign: float = 1.0, interpret: bool = True):
+    """Returns (lse, w) with lse = logsumexp(sign*eta*v), w = softmax(sign*eta*v)."""
+    n = v.shape[0]
+    nt = max(1, (n + TILE - 1) // TILE)
+    vp = jnp.pad(v, (0, nt * TILE - n)).reshape(nt * SUBLANES, LANES)
+    se = (jnp.float32(sign) * eta.astype(jnp.float32)).reshape(1)
+
+    stats = pl.pallas_call(
+        functools.partial(_reduce_kernel, n),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(se, vp)
+
+    w = pl.pallas_call(
+        functools.partial(_normalize_kernel, n),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt * SUBLANES, LANES), jnp.float32),
+        interpret=interpret,
+    )(se, vp, stats)
+    return stats[1], w.reshape(-1)[:n]

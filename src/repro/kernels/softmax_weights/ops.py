@@ -1,0 +1,24 @@
+"""Jitted dispatcher: Pallas on TPU, interpret-mode Pallas or pure-jnp on CPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import softmax_weights_pallas
+from .ref import softmax_weights_ref
+
+
+@partial(jax.jit, static_argnames=("sign", "impl"))
+def softmax_weights(v, eta, sign: float = 1.0, impl: str = "auto"):
+    """(lse, w): lse = logsumexp(sign*eta*v); w = softmax(sign*eta*v).
+
+    smax_eta(v) = lse/eta (sign=+1); smin_eta(v) = -lse/eta (sign=-1).
+    impl: "auto" (pallas on TPU, xla elsewhere) | "pallas" | "xla".
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        return softmax_weights_pallas(v, eta, sign=sign, interpret=interpret)
+    return softmax_weights_ref(v, eta, sign=sign)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the softmax_weights kernel."""
+import jax.numpy as jnp
+
+
+def softmax_weights_ref(v, eta, sign: float = 1.0):
+    a = (sign * eta) * v.astype(jnp.float32)
+    m = jnp.max(a)
+    s = jnp.sum(jnp.exp(a - m))
+    lse = m + jnp.log(s)
+    return lse, jnp.exp(a - lse)

@@ -1,0 +1,4 @@
+"""Architecture plane: layers, model assembly, per-arch configs."""
+from .model import DecodeCaches, Model
+
+__all__ = ["Model", "DecodeCaches"]

@@ -1,0 +1,76 @@
+"""Shared model-plane utilities: init, dtype policy, sharding annotations.
+
+Parameters are plain nested dicts of jax arrays (no framework dependency).
+Each init function has a twin ``*_spec`` producing a matching pytree of
+``PartitionSpec``s; ``shard_params_tree`` zips them into NamedShardings.
+
+Sharding vocabulary (DESIGN.md §5):
+  DP axes = ("pod", "data") when present — batch & ZeRO/FSDP shards.
+  TP axis = "model"          — Megatron-style tensor parallel dims.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "Dtypes",
+    "dense_init",
+    "truncated_normal_init",
+    "with_sharding",
+    "dp_axes",
+    "DP",
+    "TP",
+]
+
+TP = "model"
+
+
+def dp_axes(mesh_axes) -> tuple:
+    """The data-parallel axes present in this mesh ('pod' absorbs into DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+def DP(mesh_axes) -> Any:
+    axes = dp_axes(mesh_axes)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+class Dtypes:
+    """Resolved dtype policy for a config."""
+
+    def __init__(self, cfg):
+        self.param = jnp.dtype(cfg.param_dtype)
+        self.compute = jnp.dtype(cfg.dtype)
+        self.logit = jnp.dtype(cfg.logit_dtype)
+
+    def cast(self, x):
+        return x.astype(self.compute)
+
+
+def truncated_normal_init(key, shape, dtype, scale):
+    """He/LeCun-style truncated normal (stddev = scale / sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def dense_init(key, shape, dtype, scale=1.0):
+    return truncated_normal_init(key, shape, dtype, scale)
+
+
+def with_sharding(x, spec, mesh=None):
+    """Annotate intermediate sharding (no-op outside jit/mesh contexts)."""
+    try:
+        if mesh is not None:
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, spec)
+            )
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (single-device smoke tests)

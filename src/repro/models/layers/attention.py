@@ -1,0 +1,285 @@
+"""GQA attention: train/prefill (dense | chunked-flash) + decode w/ caches.
+
+Supports every attention variant in the assigned pool:
+  * GQA with arbitrary (n_heads, n_kv_heads) — yi/starcoder2/minitron/dbrx/
+    mixtral/internvl2; MQA (kv=1) — recurrentgemma; MHA — qwen/hubert.
+  * QKV bias (qwen1.5), RoPE (all decoders), bidirectional (hubert).
+  * Sliding-window attention (mixtral SWA, recurrentgemma local attn) with
+    ring-buffer KV caches for O(window) decode memory.
+
+Implementations:
+  * ``dense``   — materializes scores; smoke tests and decode.
+  * ``chunked`` — flash-style running-LSE streaming over KV chunks with
+    q-blocking: the XLA twin of kernels/flash_attention (same math, same
+    FLOP count); this is what the multi-pod dry-run lowers, since Mosaic
+    kernels cannot lower on CPU backends (DESIGN.md §4).
+  * ``pallas``  — the Pallas kernel (TPU target; interpret-mode on CPU).
+
+Sharding: activations are annotated (DP, None, TP, None) on the head
+axis; decode KV caches are sharded (DP, TP-on-seq) so a 32k cache fits
+a v5e (DESIGN.md §5). GSPMD inserts the LSE/psum combines for softmax
+over the sharded seq axis (flash-decoding pattern).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..common import DP, TP, dense_init, with_sharding
+from .rope import apply_rope
+
+__all__ = ["attention_init", "attention_spec", "attention_apply", "KVCache", "init_kv_cache"]
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Single-layer KV cache. ``window`` caches are rings (SWA)."""
+
+    k: jax.Array  # (B, S_cache, Hkv, dh) — rope already applied
+    v: jax.Array  # (B, S_cache, Hkv, dh)
+    slot_pos: jax.Array  # (S_cache,) absolute position per slot, -1 = empty
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16, prefix=None):
+    """Empty cache; for SWA archs max_len is min(window, max_len)."""
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        slot_pos=jnp.full((max_len,), -1, jnp.int32),
+    )
+
+
+def attention_init(key, cfg, dtype):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd), dtype),
+        "wk": dense_init(ks[1], (d, kvd), dtype),
+        "wv": dense_init(ks[2], (d, kvd), dtype),
+        "wo": dense_init(ks[3], (qd, d), dtype, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def attention_spec(cfg, fsdp: bool):
+    """PartitionSpecs; fsdp additionally shards the non-TP dim over data."""
+    dp = "data" if fsdp else None
+    s = {
+        "wq": P(dp, TP),
+        "wk": P(dp, TP),
+        "wv": P(dp, TP),
+        "wo": P(TP, dp),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": P(TP), "bk": P(TP), "bv": P(TP)})
+    return s
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window, dtype):
+    """(..., Sq, Sk) additive mask from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = kp >= 0  # valid slot
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, _NEG_INF).astype(dtype)
+
+
+def _sdpa_dense(q, k, v, q_pos, k_pos, *, causal, window):
+    """q: (B,Sq,Hq,dh); k/v: (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh). f32 softmax."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores * (1.0 / float(np.sqrt(dh)))  # python float: no x64 promotion
+    mask = _mask_bias(q_pos, k_pos, causal=causal, window=window, dtype=jnp.float32)
+    if mask.ndim == 3:  # (B, Sq, Sk) -> broadcast over (Hkv, g)
+        mask = mask[:, None, None, :, :]
+    scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, dh)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, q_block, kv_block):
+    """Flash-style streaming attention (running max / sum / accumulator).
+
+    Outer: q blocks (lax.map). Inner: scan over kv chunks. Per-step
+    footprint is (B, qb, Hq, cb) — independent of total sequence length.
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qb = min(q_block, Sq)
+    cb = min(kv_block, Sk)
+    n_qb = (Sq + qb - 1) // qb
+    n_kb = (Sk + cb - 1) // cb
+    # pad to block multiples
+    q = jnp.pad(q, ((0, 0), (0, n_qb * qb - Sq), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, ((0, n_qb * qb - Sq),), constant_values=2**30)
+    k = jnp.pad(k, ((0, 0), (0, n_kb * cb - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, n_kb * cb - Sk), (0, 0), (0, 0)))
+    kp = jnp.pad(k_pos, ((0, n_kb * cb - Sk),), constant_values=-1)
+
+    kc = k.reshape(B, n_kb, cb, Hkv, dh)
+    vc = v.reshape(B, n_kb, cb, Hkv, dh)
+    kpc = kp.reshape(n_kb, cb)
+
+    def q_block_fn(args):
+        qi, qpi = args  # (B, qb, Hq, dh), (qb,)
+        qg = qi.reshape(B, qb, Hkv, g, dh)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, vj, kpj = inp  # (B, cb, Hkv, dh), (cb,)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj).astype(jnp.float32) * (
+                1.0 / float(np.sqrt(dh))
+            )
+            s = s + _mask_bias(qpi, kpj, causal=causal, window=window, dtype=jnp.float32)
+            m2 = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m2[..., None])
+            corr = jnp.exp(m - m2)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, Hkv, g, qb), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, qb, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpc),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, qb, Hq, dh)
+
+    qblocks = jnp.moveaxis(q.reshape(B, n_qb, qb, Hq, dh), 1, 0)
+    qpb = qp.reshape(n_qb, qb)
+    out = jax.lax.map(q_block_fn, (qblocks, qpb))  # (n_qb, B, qb, Hq, dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_qb * qb, Hq, dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_apply(
+    params,
+    x,
+    cfg,
+    *,
+    positions,  # (S,) or (B,S) absolute positions of x tokens
+    cache: Optional[KVCache] = None,
+    mesh_axes=("data", "model"),
+    impl: Optional[str] = None,
+):
+    """Returns (out (B,S,d), new_cache).
+
+    cache=None      : train/prefill without cache materialization.
+    cache=KVCache   : appends x's K/V at ``positions`` then attends over
+                      the cache (decode: S == 1; chunked prefill: S > 1).
+    """
+    B, S, d = x.shape
+    dp = DP(mesh_axes)
+    impl = impl or cfg.attn_impl
+
+    # preferred_element_type pins the dot output (and thus any GSPMD
+    # partial-sum all-reduce) to the compute dtype — bf16 collectives
+    # instead of f32 (EXPERIMENTS.md §Perf, yi-34b hillclimb).
+    q = jnp.matmul(x, params["wq"].astype(x.dtype), preferred_element_type=x.dtype)
+    k = jnp.matmul(x, params["wk"].astype(x.dtype), preferred_element_type=x.dtype)
+    v = jnp.matmul(x, params["wv"].astype(x.dtype), preferred_element_type=x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    q = with_sharding(q, P(dp, None, TP, None))
+    # GQA K/V: n_kv_heads (8 / 4 / 1) rarely divides a 16-way TP axis;
+    # padded-uneven sharding makes GSPMD re-gather K/V around every
+    # attention scan step (~2 TB/step at the yi train cell). K/V are
+    # small under GQA, so replicate them across TP: one gather after the
+    # projection instead (EXPERIMENTS.md §Perf, yi-34b iteration 2).
+    kv_even = cfg.n_kv_heads % 16 == 0
+    kv_spec = P(dp, None, TP, None) if kv_even else P(dp, None, None, None)
+    k = with_sharding(k, kv_spec)
+    v = with_sharding(v, kv_spec)
+
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (B, S))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        W = cache.k.shape[1]
+        pos0 = positions[0]  # slot logic is batch-uniform; (S,)
+        slot = jnp.mod(pos0, W) if cfg.sliding_window is not None else pos0
+        # scatter new K/V into cache slots (advanced index on the seq axis)
+        ck = cache.k.at[:, slot].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[:, slot].set(v.astype(cache.v.dtype))
+        spos = cache.slot_pos.at[slot].set(pos0)
+        new_cache = KVCache(k=ck, v=cv, slot_pos=spos)
+        if S > 1:
+            # prefill from an empty cache: attention is over the prompt
+            # itself — use the memory-efficient streaming path on the
+            # local K/V rather than dense scores over the whole cache.
+            out = _sdpa_chunked(
+                q, k, v, positions[0], positions[0],
+                causal=cfg.causal, window=cfg.sliding_window,
+                q_block=cfg.attn_chunk, kv_block=cfg.attn_chunk,
+            )
+        else:
+            # decode: q replicated over TP; cache stays seq-sharded and
+            # GSPMD emits the flash-decoding LSE combine over shards.
+            q = with_sharding(q, P(dp, None, None, None))
+            out = _sdpa_dense(
+                q,
+                ck.astype(q.dtype),
+                cv.astype(q.dtype),
+                positions,
+                spos,
+                causal=cfg.causal,
+                window=cfg.sliding_window,
+            )
+    else:
+        k_pos = positions[0]
+        if impl == "dense" or S <= cfg.attn_chunk:
+            out = _sdpa_dense(q, k, v, positions, k_pos, causal=cfg.causal, window=cfg.sliding_window)
+        elif impl == "pallas":
+            from ...kernels.flash_attention import ops as fa_ops
+
+            out = fa_ops.flash_attention(
+                q, k, v, positions[0], causal=cfg.causal, window=cfg.sliding_window,
+                block_q=min(cfg.attn_chunk, S), block_k=min(cfg.attn_chunk, S),
+            )
+        else:
+            out = _sdpa_chunked(
+                q, k, v, positions[0], k_pos,
+                causal=cfg.causal, window=cfg.sliding_window,
+                q_block=cfg.attn_chunk, kv_block=cfg.attn_chunk,
+            )
+
+    out = with_sharding(out, P(dp, None, TP, None))
+    out = jnp.matmul(
+        out.reshape(B, S, cfg.q_dim), params["wo"].astype(x.dtype),
+        preferred_element_type=x.dtype,
+    )
+    return with_sharding(out, P(dp, None, None)), new_cache

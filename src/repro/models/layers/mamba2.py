@@ -1,0 +1,227 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+"attention" (quadratic) dual form; across chunks a linear scan carries
+the (H, N, P) state. Identical math to the sequential recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t (B_t ⊗ x_t)
+    y_t = C_t . h_t + D x_t
+
+(verified against the naive recurrence oracle in tests/test_mamba2.py).
+
+Decode carries (conv_state, ssm_state) — O(1) per token, which is what
+makes the long_500k cell meaningful for this family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..common import DP, TP, dense_init, with_sharding
+from .norms import apply_norm
+
+__all__ = ["mamba2_init", "mamba2_spec", "mamba2_apply", "mamba2_decode", "SSMState", "init_ssm_state"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, conv_dim) trailing conv window
+    ssm: jax.Array  # (B, H, N, Pd) running state
+    pos: jax.Array  # () int32
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    return s, di, H, conv_dim
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    s, di, H, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_init(key, cfg, dtype):
+    s, di, H, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * s.ngroups * s.d_state + H  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))).astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype, scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mamba2_spec(cfg, fsdp: bool):
+    dp = "data" if fsdp else None
+    return {
+        "in_proj": P(dp, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "A_log": P(TP),
+        "D": P(TP),
+        "dt_bias": P(TP),
+        "norm_scale": P(TP),
+        "out_proj": P(TP, dp),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, di, H, _ = _dims(cfg)
+    gN = s.ngroups * s.d_state
+    z, xBC, dt = jnp.split(proj, [di, di + di + 2 * gN], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, init_window=None):
+    """Depthwise causal conv1d. xBC: (B,S,C); w: (K,C). Returns (out, window)."""
+    K = w.shape[0]
+    if init_window is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = init_window.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_window = xp[:, -(K - 1) :] if K > 1 else xp[:, :0]
+    return jax.nn.silu(out + b[None, None, :]), new_window
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} a[..., k] (i>=j)."""
+    S = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk):
+    """SSD scan. x:(B,S,H,Pd) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,G,N).
+
+    Returns (y (B,S,H,Pd), final_state (B,H,N,Pd)).
+    """
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # group-broadcast B/C to heads, fold dt into x
+    Bh = jnp.repeat(Bm, rep, axis=2).reshape(Bsz, nc, Q, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2).reshape(Bsz, nc, Q, H, N)
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    a = (-jnp.exp(A))[None, None, None, :] * dtc  # log-decay per step (B,nc,Q,H)
+    dx = xc * dtc[..., None]
+
+    # --- intra-chunk (quadratic dual form) --------------------------------
+    Lseg = _segsum(jnp.moveaxis(a, -1, -2))  # (B,nc,H,Q,Q)
+    L = jnp.exp(Lseg)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh) * L
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, dx)
+
+    # --- chunk states and inter-chunk scan --------------------------------
+    cum_a = jnp.cumsum(a, axis=2)  # (B,nc,Q,H)
+    total_a = cum_a[:, :, -1]  # (B,nc,H)
+    decay_to_end = jnp.exp(total_a[:, :, None] - cum_a)  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqhn,bcqhp->bchnp", Bh * decay_to_end[..., None], dx)
+
+    def step(h_prev, inp):
+        S_i, tot_i = inp  # (B,H,N,Pd), (B,H)
+        h = h_prev * jnp.exp(tot_i)[..., None, None] + S_i
+        return h, h_prev  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S_c, 1, 0).astype(jnp.float32), jnp.moveaxis(total_a, 1, 0))
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,N,Pd) state entering chunk
+
+    y_off = jnp.einsum(
+        "bcqhn,bchnp->bcqhp", Ch * jnp.exp(cum_a)[..., None], h_prevs.astype(Ch.dtype)
+    )
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, Pd)
+    return y[:, :S], h_last
+
+
+def mamba2_apply(params, xin, cfg, mesh_axes=("data", "model"), state: SSMState | None = None):
+    """Full-sequence SSD. Returns (out (B,S,d), final SSMState or None)."""
+    s, di, H, conv_dim = _dims(cfg)
+    dp = DP(mesh_axes)
+    Bsz, S, d = xin.shape
+
+    proj = xin @ params["in_proj"].astype(xin.dtype)
+    z, xBC, dt = _split_proj(cfg, proj)
+    xBC, conv_win = _causal_conv(
+        xBC, params["conv_w"].astype(xin.dtype), params["conv_b"].astype(xin.dtype),
+        None if state is None else state.conv,
+    )
+    gN = s.ngroups * s.d_state
+    xs, Bm, Cm = jnp.split(xBC, [di, di + gN], axis=-1)
+    xs = xs.reshape(Bsz, S, H, s.head_dim)
+    xs = with_sharding(xs, P(dp, None, TP, None))
+    Bm = Bm.reshape(Bsz, S, s.ngroups, s.d_state)
+    Cm = Cm.reshape(Bsz, S, s.ngroups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+
+    y, h_last = _ssd_chunked(
+        xs.astype(jnp.float32), dtv, params["A_log"], Bm.astype(jnp.float32),
+        Cm.astype(jnp.float32), s.chunk,
+    )
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    y = apply_norm({"scale": params["norm_scale"]}, y, "rmsnorm", cfg.norm_eps)
+    out = y @ params["out_proj"].astype(xin.dtype)
+    new_state = None
+    if state is not None:
+        new_state = SSMState(conv=conv_win, ssm=h_last, pos=state.pos + S)
+    return with_sharding(out, P(dp, None, None)), new_state
+
+
+def mamba2_decode(params, xin, cfg, state: SSMState, mesh_axes=("data", "model")):
+    """Single-token recurrence. xin: (B, 1, d)."""
+    s, di, H, conv_dim = _dims(cfg)
+    Bsz = xin.shape[0]
+    proj = xin[:, 0] @ params["in_proj"].astype(xin.dtype)  # (B, proj)
+    z, xBC, dt = _split_proj(cfg, proj)
+    # conv over stored window + current
+    win = jnp.concatenate([state.conv.astype(xin.dtype), xBC[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(xin.dtype)
+    conv_out = jax.nn.silu((win * w[None]).sum(axis=1) + params["conv_b"].astype(xin.dtype))
+    gN = s.ngroups * s.d_state
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + gN], axis=-1)
+    xs = xs.reshape(Bsz, H, s.head_dim).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(Bsz, s.ngroups, s.d_state), H // s.ngroups, axis=1)
+    Cm = jnp.repeat(Cm.reshape(Bsz, s.ngroups, s.d_state), H // s.ngroups, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,H)
+    decay = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dtv)  # (B,H)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bm.astype(jnp.float32), xs * dtv[..., None])
+    h = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(Bsz, di).astype(xin.dtype) * jax.nn.silu(z)
+    y = apply_norm({"scale": params["norm_scale"]}, y, "rmsnorm", cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(xin.dtype))[:, None, :]
+    return out, SSMState(conv=win[:, 1:], ssm=h, pos=state.pos + 1)

@@ -1,0 +1,48 @@
+"""Dense FFN: SwiGLU (llama-family) and GELU (starcoder2-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..common import DP, TP, dense_init, with_sharding
+
+__all__ = ["mlp_init", "mlp_spec", "mlp_apply"]
+
+
+def mlp_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": dense_init(ks[0], (d, f), dtype),
+            "wu": dense_init(ks[1], (d, f), dtype),
+            "wd": dense_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "wu": dense_init(ks[0], (d, f), dtype),
+        "wd": dense_init(ks[1], (f, d), dtype),
+        "bu": jnp.zeros((f,), dtype),
+        "bd": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_spec(cfg, fsdp: bool):
+    dp = "data" if fsdp else None
+    if cfg.mlp_type == "swiglu":
+        return {"wg": P(dp, TP), "wu": P(dp, TP), "wd": P(TP, dp)}
+    return {"wu": P(dp, TP), "wd": P(TP, dp), "bu": P(TP), "bd": P(None)}
+
+
+def mlp_apply(params, x, cfg, mesh_axes=("data", "model")):
+    dp = DP(mesh_axes)
+    mm = lambda a, w: jnp.matmul(a, w.astype(a.dtype), preferred_element_type=a.dtype)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(mm(x, params["wg"])) * mm(x, params["wu"])
+    else:
+        h = jax.nn.gelu(mm(x, params["wu"]) + params["bu"].astype(x.dtype))
+    h = with_sharding(h, P(dp, None, TP))
+    out = mm(h, params["wd"])
+    if "bd" in params:
+        out = out + params["bd"].astype(x.dtype)
+    return with_sharding(out, P(dp, None, None))

@@ -1,0 +1,312 @@
+"""Mixture-of-Experts layer (dbrx 16e/top-4, mixtral 8e/top-2).
+
+Dispatch is sort-based (capacity-bounded gather/scatter, MegaBlocks-style
+rather than GShard one-hot einsums, whose (tokens x experts x capacity)
+dispatch tensors cannot fit at 1M-token dry-run shapes).
+
+Routers:
+  * ``topk`` — standard softmax top-k with capacity dropping.
+  * ``mwu``  — **the paper's technique as a first-class feature**: the
+    token->expert assignment is a mixed packing/covering LP
+
+        max <affinity, x>   s.t.  sum_t x[t,e] <= capacity_e   (packing)
+                                  sum_e x[t,e] >= top_k        (covering)
+                                  0 <= x[t,e] <= 1             (packing)
+
+    solved in-graph by ``repro.core.solve`` (Algorithm 2, Newton line
+    search) over implicit row/column-sum operators — exactly the solver
+    used for the graph LPs, running inside the model's forward pass. The
+    fractional assignment is rounded per-token to top-k; capacities are
+    respected in expectation, which measurably flattens expert load
+    (see tests/test_moe.py and examples/moe_mwu_routing.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ...core import MWUOptions, OnesRow, VStack, solve
+from ...core.operators import LinOp, register_op, static_field
+from ..common import DP, TP, dense_init, with_sharding
+
+__all__ = ["moe_init", "moe_spec", "moe_apply", "mwu_route", "topk_route", "expert_load"]
+
+
+# ----------------------------------------------------------------------
+# Implicit operators for the routing LP (T tokens x E experts variables)
+# ----------------------------------------------------------------------
+
+
+@register_op
+@dataclass
+class ExpertCapRows(LinOp):
+    """Packing rows: (sum_t x[t,e]) / cap_e <= 1. Shape (E, T*E)."""
+
+    inv_cap: jax.Array  # (E,)
+    T: int = static_field(default=0)
+
+    @property
+    def shape(self):
+        E = int(self.inv_cap.shape[0])
+        return (E, self.T * E)
+
+    def matvec(self, x):
+        E = self.inv_cap.shape[0]
+        return x.reshape(self.T, E).sum(axis=0) * self.inv_cap
+
+    def rmatvec(self, w):
+        E = self.inv_cap.shape[0]
+        return jnp.broadcast_to((w * self.inv_cap)[None, :], (self.T, E)).reshape(-1)
+
+    def colmax(self, row_scale=None):
+        E = self.inv_cap.shape[0]
+        s = self.inv_cap if row_scale is None else self.inv_cap * row_scale
+        return jnp.broadcast_to(s[None, :], (self.T, E)).reshape(-1)
+
+    @property
+    def nnz(self):
+        return self.T * int(self.inv_cap.shape[0])
+
+
+@register_op
+@dataclass
+class TokenSumRows(LinOp):
+    """Covering rows: (sum_e x[t,e]) / k >= 1. Shape (T, T*E)."""
+
+    inv_k: jax.Array  # scalar
+    T: int = static_field(default=0)
+    E: int = static_field(default=0)
+
+    @property
+    def shape(self):
+        return (self.T, self.T * self.E)
+
+    def matvec(self, x):
+        return x.reshape(self.T, self.E).sum(axis=1) * self.inv_k
+
+    def rmatvec(self, w):
+        return jnp.broadcast_to((w * self.inv_k)[:, None], (self.T, self.E)).reshape(-1)
+
+    def colmax(self, row_scale=None):
+        if row_scale is None:
+            return jnp.broadcast_to(self.inv_k, (self.T * self.E,))
+        return self.rmatvec(row_scale)
+
+    @property
+    def nnz(self):
+        return self.T * self.E
+
+
+@register_op
+@dataclass
+class BoxRows(LinOp):
+    """Packing rows x[t,e] <= 1 (identity)."""
+
+    n: int = static_field(default=0)
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    def matvec(self, x):
+        return x
+
+    def rmatvec(self, y):
+        return y
+
+    def colmax(self, row_scale=None):
+        if row_scale is None:
+            return jnp.ones((self.n,), jnp.float32)
+        return row_scale
+
+    @property
+    def nnz(self):
+        return self.n
+
+
+# ----------------------------------------------------------------------
+# Routers
+# ----------------------------------------------------------------------
+
+
+def topk_route(logits, k):
+    """(T, E) logits -> (expert_idx (T,k), gate (T,k)) softmax-renormalized."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return idx, gate.astype(logits.dtype)
+
+
+def mwu_route(logits, k, capacity, mwu_iters=16):
+    """MWU-LP router. Returns (expert_idx (T,k), gate (T,k)).
+
+    Solves the capacity-constrained assignment LP with the paper's
+    Algorithm 2 (Newton step search) for a fixed iteration budget, then
+    rounds per-token to the top-k of the fractional assignment.
+    Gradients flow through the gates (softmax probs at chosen experts);
+    the assignment itself is a stop-gradient integer plan, exactly like
+    standard top-k routing.
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    affin = jax.lax.stop_gradient(probs.reshape(-1))  # objective weights
+
+    P_op = VStack(ops=(
+        ExpertCapRows(inv_cap=jnp.full((E,), 1.0 / capacity, jnp.float32), T=T),
+        BoxRows(n=T * E),
+    ))
+    # objective embedding: <affin, x> >= M with M = 60% of the ideal k*T/E
+    # mass weighted by mean affinity (a conservative reachable bound)
+    M = 0.6 * float(k) * T / E * 1.0
+    C_op = VStack(ops=(
+        TokenSumRows(inv_k=jnp.asarray(1.0 / k, jnp.float32), T=T, E=E),
+        OnesRow(c=affin, inv_bound=jnp.asarray(1.0 / jnp.maximum(affin.sum() * 0.5, 1e-6))),
+    ))
+    res = solve(
+        P_op, C_op,
+        MWUOptions(eps=0.25, step_rule="newton", max_iter=mwu_iters, check_packing=False),
+    )
+    x = jax.lax.stop_gradient(res.x.reshape(T, E))
+    # round: top-k of the fractional plan; gates from router probs
+    _, idx = jax.lax.top_k(x + 1e-6 * probs, k)  # tie-break by affinity
+    gate = jnp.take_along_axis(probs, idx, axis=1)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return idx, gate.astype(logits.dtype)
+
+
+def expert_load(idx, E):
+    """Tokens assigned per expert — load-balance diagnostic."""
+    return jnp.bincount(idx.reshape(-1), length=E)
+
+
+# ----------------------------------------------------------------------
+# MoE layer
+# ----------------------------------------------------------------------
+
+
+def moe_init(key, cfg, dtype):
+    d, m = cfg.d_model, cfg.moe
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, m.n_experts), dtype),
+        "wg": dense_init(ks[1], (m.n_experts, d, m.d_ff), dtype),
+        "wu": dense_init(ks[2], (m.n_experts, d, m.d_ff), dtype),
+        "wd": dense_init(ks[3], (m.n_experts, m.d_ff, d), dtype),
+    }
+
+
+def moe_spec(cfg, fsdp: bool):
+    dp = "data" if fsdp else None
+    ep = cfg.moe.ep_axis
+    if ep == "data":
+        # expert-parallel over data (serving of >TP-shard models, e.g.
+        # dbrx's 16 experts): experts over data, expert-hidden over model.
+        e_spec = lambda: P("data", None, TP)
+        d_spec = P("data", TP, None)
+    elif ep == "matrix":
+        # expert count does not divide any axis (mixtral: 8 experts on
+        # 16-way axes): shard each expert's matrix 2-D over (data, model)
+        # instead — still 256-way fully-sharded weights.
+        e_spec = lambda: P(None, "data", TP)
+        d_spec = P(None, TP, "data")
+    else:
+        e_spec = lambda: P(dp, None, TP)
+        d_spec = P(dp, TP, None)
+    return {
+        "router": P(None, None),
+        "wg": e_spec(),
+        "wu": e_spec(),
+        "wd": d_spec,
+    }
+
+
+def _dispatch_group(xt, idx, gate, E, cap, dtype):
+    """Sort-based capacity dispatch for ONE token group (all local work).
+
+    xt: (T, d); idx/gate: (T, k). Returns (he (E, cap, d), combine info).
+    """
+    T, d = xt.shape
+    k = idx.shape[1]
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e)  # stable
+    se, st_, sg = flat_e[order], flat_t[order], flat_g[order]
+    start = jnp.searchsorted(se, jnp.arange(E))
+    rank = jnp.arange(T * k) - start[se]
+    valid = rank < cap
+    slot = jnp.where(valid, se * cap + rank, E * cap)  # overflow -> scratch
+    buf = jnp.zeros((E * cap + 1, d), dtype).at[slot].set(xt[st_])
+    return buf[: E * cap].reshape(E, cap, d), (slot, st_, sg, valid)
+
+
+def _combine_group(ho, info, T, dtype):
+    slot, st_, sg, valid = info
+    E_cap, d = ho.reshape(-1, ho.shape[-1]).shape
+    out_rows = ho.reshape(E_cap, d)
+    gathered = out_rows[jnp.minimum(slot, E_cap - 1)]
+    w = jnp.where(valid, sg, 0.0).astype(dtype)
+    return jnp.zeros((T, d), dtype).at[st_].add(gathered * w[:, None])
+
+
+def moe_apply(params, x, cfg, mesh_axes=("data", "model"), rng=None):
+    """x: (B, S, d) -> (B, S, d). Sort-based capacity dispatch.
+
+    Dispatch is performed in ``cfg.moe_dispatch_groups`` independent token
+    groups laid out along the data axis: sorting, capacity ranking and
+    the combine scatter stay *shard-local*; only the expert einsums cross
+    shards (the EP all-to-all GSPMD inserts). Without grouping, GSPMD
+    partitions the global (T*k, d) scatter as replicate+all-reduce — a
+    15 TB/device disaster at the dbrx train cell (EXPERIMENTS.md §Perf).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.n_experts, m.top_k
+    G = max(1, getattr(cfg, "moe_dispatch_groups", 1))
+    while T % G != 0:  # degenerate smoke shapes
+        G //= 2
+    Tg = T // G
+    cap = int(np.ceil(Tg * k * m.capacity_factor / E))
+    cap = max(8, ((cap + 7) // 8) * 8)  # TPU-friendly multiple
+    dp = DP(mesh_axes)
+
+    xt = x.reshape(G, Tg, d)
+    xt = with_sharding(xt, P(dp, None, None))
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    if m.router == "mwu":
+        idx, gate = jax.vmap(lambda lg: mwu_route(lg, k, cap, m.mwu_iters))(logits)
+    else:
+        idx, gate = jax.vmap(lambda lg: topk_route(lg, k))(logits)
+
+    he, info = jax.vmap(
+        lambda xg, ig, gg: _dispatch_group(xg, ig, gg, E, cap, x.dtype)
+    )(xt, idx, gate)
+    # he: (G, E, cap, d) — G on data; expert einsum crosses into the
+    # expert sharding (EP all-to-all / weight-stationary, per ep_axis)
+    e_shard = "data" if m.ep_axis == "data" else (None if m.ep_axis == "matrix" else dp)
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    if e_shard in dp_axes:
+        # group dim already occupies this axis (multi-pod DP = (pod, data));
+        # leave the expert dim to GSPMD — the E-sharded weights still pull
+        # the EP all-to-all in the einsum below.
+        e_shard = None
+    he = with_sharding(he, P(dp, e_shard, None, None))
+
+    pt = jnp.dtype(cfg.dtype) if hasattr(cfg, "dtype") else x.dtype
+    hg = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", he, params["wg"].astype(x.dtype),
+                   preferred_element_type=x.dtype)
+    )
+    hu = jnp.einsum("gecd,edf->gecf", he, params["wu"].astype(x.dtype),
+                    preferred_element_type=x.dtype)
+    ho = jnp.einsum("gecf,efd->gecd", hg * hu, params["wd"].astype(x.dtype),
+                    preferred_element_type=x.dtype)
+
+    yt = jax.vmap(lambda h, i: _combine_group(h, i, Tg, x.dtype))(ho, info)
+    return with_sharding(yt.reshape(B, S, d), P(dp, None, None))

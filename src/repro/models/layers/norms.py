@@ -1,0 +1,35 @@
+"""RMSNorm / LayerNorm (computed in f32, cast back to compute dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["norm_init", "norm_spec", "apply_norm"]
+
+
+def norm_init(d: int, norm_type: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_spec(norm_type: str):
+    s = {"scale": P(None)}
+    if norm_type == "layernorm":
+        s["bias"] = P(None)
+    return s
+
+
+def apply_norm(params, x, norm_type: str, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * (1.0 / jnp.sqrt(ms + eps)) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)

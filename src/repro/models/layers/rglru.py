@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrent block:  out = W_out( GeLU(W_gate u) ⊙ RGLRU(conv1d(W_x u)) )
+RG-LRU cell:      r_t = sigmoid(W_a xi_t);  i_t = sigmoid(W_i xi_t)
+                  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+                  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ xi_t)
+
+The linear recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth — the TPU-native answer to the paper-family's sequential
+scan kernels). Decode carries (conv window, h) — O(1) per token, making
+the long_500k cell meaningful (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..common import DP, TP, dense_init, with_sharding
+
+__all__ = ["rglru_init", "rglru_spec", "rglru_apply", "rglru_decode", "RGLRUState", "init_rglru_state"]
+
+_C = 8.0
+_CONV_K = 4
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array  # (B, K-1, w)
+    h: jax.Array  # (B, w) recurrent state
+    pos: jax.Array  # ()
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.float32):
+    w = cfg.rnn_width
+    return RGLRUState(
+        conv=jnp.zeros((batch, _CONV_K - 1, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def rglru_init(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 5)
+    return {
+        "wx": dense_init(ks[0], (d, w), dtype),
+        "wgate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (_CONV_K, w), dtype, scale=1.0),
+        "conv_b": jnp.zeros((w,), dtype),
+        # diagonal recurrence/input gates (RecurrentGemma uses block-diag;
+        # diagonal is the faithful-lite variant, noted in DESIGN.md)
+        "wa": dense_init(ks[3], (w,), jnp.float32, scale=1.0),
+        "wi": dense_init(ks[4], (w,), jnp.float32, scale=1.0),
+        "lam": jnp.linspace(0.9, 0.999, w).astype(jnp.float32),  # a ~ in (0.9, 0.999)
+        "wout": dense_init(jax.random.fold_in(key, 9), (w, d), dtype,
+                           scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def rglru_spec(cfg, fsdp: bool):
+    dp = "data" if fsdp else None
+    return {
+        "wx": P(dp, TP),
+        "wgate": P(dp, TP),
+        "conv_w": P(None, TP),
+        "conv_b": P(TP),
+        "wa": P(TP),
+        "wi": P(TP),
+        "lam": P(TP),
+        "wout": P(TP, dp),
+    }
+
+
+def _gates(params, xi):
+    """r, i, log_a, beta from the conv output xi (f32)."""
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * params["wa"])
+    i = jax.nn.sigmoid(xf * params["wi"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * xf)
+
+
+def _conv(params, x, window):
+    K = _CONV_K
+    if window is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + params["conv_b"].astype(x.dtype), xp[:, -(K - 1) :]
+
+
+def rglru_apply(params, xin, cfg, mesh_axes=("data", "model"), state: RGLRUState | None = None):
+    """Full-sequence recurrent block. Returns (out, new_state|None)."""
+    dp = DP(mesh_axes)
+    B, S, d = xin.shape
+    xb = xin @ params["wx"].astype(xin.dtype)
+    gate = jax.nn.gelu(xin @ params["wgate"].astype(xin.dtype))
+    xi, conv_win = _conv(params, xb, None if state is None else state.conv)
+    xi = with_sharding(xi, P(dp, None, TP))
+
+    a, b = _gates(params, xi)  # (B,S,w) f32
+    if state is not None:
+        # fold carried state into the first step: h_0 contribution
+        b = b.at[:, 0].add(a[:, 0] * state.h)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(xin.dtype)) * gate
+    out = y @ params["wout"].astype(xin.dtype)
+    new_state = None
+    if state is not None:
+        new_state = RGLRUState(conv=conv_win, h=h[:, -1], pos=state.pos + S)
+    return with_sharding(out, P(dp, None, None)), new_state
+
+
+def rglru_decode(params, xin, cfg, state: RGLRUState, mesh_axes=("data", "model")):
+    """Single-token step. xin: (B,1,d)."""
+    x1 = xin[:, 0]
+    xb = x1 @ params["wx"].astype(xin.dtype)
+    gate = jax.nn.gelu(x1 @ params["wgate"].astype(xin.dtype))
+    win = jnp.concatenate([state.conv.astype(xin.dtype), xb[:, None]], axis=1)
+    w = params["conv_w"].astype(xin.dtype)
+    xi = (win * w[None]).sum(axis=1) + params["conv_b"].astype(xin.dtype)
+    a, b = _gates(params, xi[:, None, :])
+    a, b = a[:, 0], b[:, 0]
+    h = a * state.h + b
+    y = h.astype(xin.dtype) * gate
+    out = (y @ params["wout"].astype(xin.dtype))[:, None]
+    return out, RGLRUState(conv=win[:, 1:], h=h, pos=state.pos + 1)

@@ -1,0 +1,37 @@
+"""Rotary position embeddings (RoPE, arXiv:2104.09864) + sinusoidal abs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["apply_rope", "sinusoidal_positions"]
+
+
+def _rope_angles(positions, d_head: int, theta: float):
+    """(..., S) int positions -> cos/sin tables (..., S, d_head/2)."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (B, S, H, D) -> rotated; positions: (B, S) or (S,)."""
+    B = x.shape[0]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)  # (B,S,half)
+    cos = cos[:, :, None, :]  # broadcast over heads
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int, dtype=jnp.float32):
+    """Classic transformer sin/cos absolute position table (S, d)."""
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2][: pe[:, 1::2].shape[-1]]))
+    return pe.astype(dtype)

@@ -1,0 +1,382 @@
+"""Model assembly: embeddings -> scanned block stack -> logits.
+
+One Model class serves all 10 assigned architectures; the per-layer
+block kind comes from ``cfg.pattern()``:
+
+  * "attn"  — norm→attention→res, norm→(mlp|moe)→res   (dense/moe/enc/vlm)
+  * "ssm"   — norm→mamba2→res                           (mamba2)
+  * "rglru" — norm→rglru→res, norm→mlp→res              (recurrentgemma)
+
+Layers are grouped into repetitions of the pattern and scanned with
+``lax.scan`` (stacked params, leading ``reps`` axis) so the HLO is
+O(pattern) rather than O(n_layers) — essential for 60-layer dry-run
+compiles — with ``jax.checkpoint`` rematerialization per superblock.
+
+Modality stubs (per instructions): "audio_frames" consumes precomputed
+(B,S,d_model) frame embeddings; "vision_text" consumes precomputed patch
+embeddings concatenated before the text tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .common import DP, TP, Dtypes, dense_init, with_sharding
+from .layers import attention as att
+from .layers import mamba2 as m2
+from .layers import mlp as mlpmod
+from .layers import moe as moemod
+from .layers import norms
+from .layers import rglru as rg
+
+__all__ = ["Model", "DecodeCaches"]
+
+
+class DecodeCaches(NamedTuple):
+    """Stacked per-pattern-position caches + scalar position counter."""
+
+    scanned: tuple  # one stacked cache pytree per pattern position
+    tail: tuple  # unstacked caches for remainder layers
+    pos: jax.Array  # () int32 — tokens decoded so far
+
+
+def _stack_init(fn, key, reps):
+    keys = jax.random.split(key, reps)
+    return jax.vmap(fn)(keys)
+
+
+def _prepend_none(spec_tree):
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+class Model:
+    def __init__(self, cfg, mesh_axes=("data", "model"), fsdp=True):
+        self.cfg = cfg
+        self.mesh_axes = mesh_axes
+        self.fsdp = fsdp
+        self.dt = Dtypes(cfg)
+        pat = cfg.pattern()
+        self.pattern_unit = cfg.block_pattern or (pat[0],)
+        k = len(self.pattern_unit)
+        self.reps = cfg.n_layers // k
+        self.tail_kinds = pat[self.reps * k :]
+
+    # ------------------------------------------------------------------
+    # init / specs
+    # ------------------------------------------------------------------
+
+    def _block_init(self, kind, key):
+        cfg, dtp = self.cfg, self.dt.param
+        p = {"ln1": norms.norm_init(cfg.d_model, cfg.norm_type, dtp)}
+        if kind == "attn":
+            p["attn"] = att.attention_init(key, cfg, dtp)
+            p["ln2"] = norms.norm_init(cfg.d_model, cfg.norm_type, dtp)
+            if cfg.moe is not None:
+                p["moe"] = moemod.moe_init(jax.random.fold_in(key, 1), cfg, dtp)
+            else:
+                p["mlp"] = mlpmod.mlp_init(jax.random.fold_in(key, 1), cfg, dtp)
+        elif kind == "ssm":
+            p["ssm"] = m2.mamba2_init(key, cfg, dtp)
+        elif kind == "rglru":
+            p["rglru"] = rg.rglru_init(key, cfg, dtp)
+            p["ln2"] = norms.norm_init(cfg.d_model, cfg.norm_type, dtp)
+            p["mlp"] = mlpmod.mlp_init(jax.random.fold_in(key, 1), cfg, dtp)
+        else:
+            raise ValueError(kind)
+        return p
+
+    def _block_spec(self, kind):
+        cfg = self.cfg
+        s = {"ln1": norms.norm_spec(cfg.norm_type)}
+        if kind == "attn":
+            s["attn"] = att.attention_spec(cfg, self.fsdp)
+            s["ln2"] = norms.norm_spec(cfg.norm_type)
+            if cfg.moe is not None:
+                s["moe"] = moemod.moe_spec(cfg, self.fsdp)
+            else:
+                s["mlp"] = mlpmod.mlp_spec(cfg, self.fsdp)
+        elif kind == "ssm":
+            s["ssm"] = m2.mamba2_spec(cfg, self.fsdp)
+        elif kind == "rglru":
+            s["rglru"] = rg.rglru_spec(cfg, self.fsdp)
+            s["ln2"] = norms.norm_spec(cfg.norm_type)
+            s["mlp"] = mlpmod.mlp_spec(cfg, self.fsdp)
+        return s
+
+    def init(self, key):
+        cfg, dtp = self.cfg, self.dt.param
+        V, d = cfg.padded_vocab, cfg.d_model
+        kE, kB, kT, kH = jax.random.split(key, 4)
+        params = {}
+        if cfg.modality == "audio_frames":
+            params["frame_proj"] = dense_init(kE, (d, d), dtp)
+        params["embed"] = dense_init(kE, (V, d), dtp, scale=np.sqrt(d))
+        blocks = {}
+        for j, kind in enumerate(self.pattern_unit):
+            blocks[f"b{j}"] = _stack_init(
+                functools.partial(self._block_init, kind), jax.random.fold_in(kB, j), self.reps
+            )
+        params["blocks"] = blocks
+        tail = {}
+        for j, kind in enumerate(self.tail_kinds):
+            tail[f"t{j}"] = self._block_init(kind, jax.random.fold_in(kT, j))
+        params["tail"] = tail
+        params["final_norm"] = norms.norm_init(d, cfg.norm_type, dtp)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(kH, (d, V), dtp)
+        return params
+
+    def param_spec(self):
+        cfg = self.cfg
+        dp = "data" if self.fsdp else None
+        spec = {"embed": P(TP, dp)}
+        if cfg.modality == "audio_frames":
+            spec["frame_proj"] = P(None, TP)
+        spec["blocks"] = {
+            f"b{j}": _prepend_none(self._block_spec(kind))
+            for j, kind in enumerate(self.pattern_unit)
+        }
+        spec["tail"] = {
+            f"t{j}": self._block_spec(kind) for j, kind in enumerate(self.tail_kinds)
+        }
+        spec["final_norm"] = norms.norm_spec(cfg.norm_type)
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = P(dp, TP)
+        return spec
+
+    def abstract_params(self):
+        """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    # block application
+    # ------------------------------------------------------------------
+
+    def _apply_block(self, kind, p, x, positions, cache=None, decode=False):
+        cfg = self.cfg
+        nrm = lambda q, v: norms.apply_norm(q, v, cfg.norm_type, cfg.norm_eps)
+        new_cache = cache
+        if kind == "attn":
+            h = nrm(p["ln1"], x)
+            if decode or cache is not None:
+                a, new_cache = att.attention_apply(
+                    p["attn"], h, cfg, positions=positions, cache=cache, mesh_axes=self.mesh_axes
+                )
+            else:
+                a, _ = att.attention_apply(
+                    p["attn"], h, cfg, positions=positions, mesh_axes=self.mesh_axes
+                )
+            x = x + a
+            h = nrm(p["ln2"], x)
+            if cfg.moe is not None:
+                x = x + moemod.moe_apply(p["moe"], h, cfg, self.mesh_axes)
+            else:
+                x = x + mlpmod.mlp_apply(p["mlp"], h, cfg, self.mesh_axes)
+        elif kind == "ssm":
+            h = nrm(p["ln1"], x)
+            if decode:
+                o, new_cache = m2.mamba2_decode(p["ssm"], h, cfg, cache, self.mesh_axes)
+            else:
+                o, new_cache = m2.mamba2_apply(p["ssm"], h, cfg, self.mesh_axes, state=cache)
+            x = x + o
+        elif kind == "rglru":
+            h = nrm(p["ln1"], x)
+            if decode:
+                o, new_cache = rg.rglru_decode(p["rglru"], h, cfg, cache, self.mesh_axes)
+            else:
+                o, new_cache = rg.rglru_apply(p["rglru"], h, cfg, self.mesh_axes, state=cache)
+            x = x + o
+            h = nrm(p["ln2"], x)
+            x = x + mlpmod.mlp_apply(p["mlp"], h, cfg, self.mesh_axes)
+        return x, new_cache
+
+    def _superblock(self, params_j_tree, x, positions, caches=None, decode=False):
+        """Apply one repetition of the pattern; caches aligned by position."""
+        new_caches = []
+        for j, kind in enumerate(self.pattern_unit):
+            c = None if caches is None else caches[j]
+            x, nc = self._apply_block(kind, params_j_tree[f"b{j}"], x, positions, c, decode)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    # ------------------------------------------------------------------
+    # embeddings / logits
+    # ------------------------------------------------------------------
+
+    def embed(self, params, batch):
+        """batch: dict with 'tokens' and optional 'frames'/'patches'."""
+        cfg = self.cfg
+        dp = DP(self.mesh_axes)
+        emb = params["embed"].astype(self.dt.compute)
+        if cfg.modality == "audio_frames":
+            x = batch["frames"].astype(self.dt.compute) @ params["frame_proj"].astype(self.dt.compute)
+        elif cfg.modality == "vision_text":
+            tok = emb[batch["tokens"]]  # (B, S_text, d)
+            if "patches" in batch:  # decode steps are text-only
+                patches = batch["patches"].astype(self.dt.compute)
+                tok = jnp.concatenate([patches, tok], axis=1)
+            x = tok
+        else:
+            x = emb[batch["tokens"]]
+        return with_sharding(x, P(dp, None, None))
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ).astype(self.dt.compute)
+        out = (x @ head).astype(self.dt.logit)
+        V = cfg.padded_vocab
+        if V != cfg.vocab_size:  # mask pad-vocab slots
+            pad_mask = jnp.arange(V) >= cfg.vocab_size
+            out = jnp.where(pad_mask[None, None, :], -1e30, out)
+        return with_sharding(out, P(DP(self.mesh_axes), None, TP))
+
+    # ------------------------------------------------------------------
+    # forward (train / encode / prefill-logits)
+    # ------------------------------------------------------------------
+
+    def forward(self, params, batch, remat: Optional[bool] = None):
+        """Full-sequence forward -> hidden states (B, S, d)."""
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        use_remat = cfg.remat == "full" if remat is None else remat
+
+        def body(x, pblock):
+            out, _ = self._superblock(pblock, x, positions)
+            return out, None
+
+        if use_remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        for j, kind in enumerate(self.tail_kinds):
+            x, _ = self._apply_block(kind, params["tail"][f"t{j}"], x, positions)
+        return norms.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def _make_cache(self, kind, batch, max_len):
+        cfg = self.cfg
+        if kind == "attn":
+            return att.init_kv_cache(cfg, batch, max_len, dtype=self.dt.compute)
+        if kind == "ssm":
+            return m2.init_ssm_state(cfg, batch)
+        if kind == "rglru":
+            return rg.init_rglru_state(cfg, batch)
+        raise ValueError(kind)
+
+    def init_caches(self, batch, max_len) -> DecodeCaches:
+        scanned = []
+        for kind in self.pattern_unit:
+            concrete = self._make_cache(kind, batch, max_len)
+            stacked = jax.tree.map(
+                lambda c: jnp.broadcast_to(c[None], (self.reps,) + c.shape), concrete
+            )
+            scanned.append(stacked)
+        tail = tuple(self._make_cache(k, batch, max_len) for k in self.tail_kinds)
+        return DecodeCaches(scanned=tuple(scanned), tail=tail, pos=jnp.zeros((), jnp.int32))
+
+    def cache_spec(self, shard_seq=True, shard_batch=True):
+        """PartitionSpecs for DecodeCaches (DESIGN.md §5 decode layout).
+
+        shard_batch=False for cells whose global batch does not divide
+        the DP axes (long_500k's single request)."""
+        dp = DP(self.mesh_axes) if shard_batch else None
+        seq = TP if shard_seq else None
+
+        def one(kind, stacked):
+            lead = (None,) if stacked else ()
+            if kind == "attn":
+                return att.KVCache(
+                    k=P(*lead, dp, seq, None, None),
+                    v=P(*lead, dp, seq, None, None),
+                    slot_pos=P(*lead, seq),
+                )
+            if kind == "ssm":
+                return m2.SSMState(
+                    conv=P(*lead, dp, None, TP), ssm=P(*lead, dp, TP, None, None),
+                    pos=P(*lead) if stacked else P(),
+                )
+            if kind == "rglru":
+                return rg.RGLRUState(
+                    conv=P(*lead, dp, None, TP), h=P(*lead, dp, TP),
+                    pos=P(*lead) if stacked else P(),
+                )
+
+        return DecodeCaches(
+            scanned=tuple(one(k, True) for k in self.pattern_unit),
+            tail=tuple(one(k, False) for k in self.tail_kinds),
+            pos=P(),
+        )
+
+    def decode_step(self, params, caches: DecodeCaches, tokens):
+        """One decode step. tokens: (B, 1) (or frames (B,1,d)). Returns
+        (logits (B, 1, V), new caches)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens} if cfg.modality != "audio_frames" else {"frames": tokens}
+        x = self.embed(params, batch)
+        positions = jnp.full((1,), caches.pos, jnp.int32)
+
+        def body(x, inp):
+            pblock, cache = inp
+            out, ncache = self._superblock(pblock, x, positions, cache, decode=True)
+            return out, ncache
+
+        # scan over reps, threading caches as scanned inputs/outputs
+        def scan_body(carry, inp):
+            x = carry
+            x, ncache = body(x, inp)
+            return x, ncache
+
+        x, new_scanned = jax.lax.scan(
+            scan_body, x, (params["blocks"], caches.scanned)
+        )
+        new_tail = []
+        for j, kind in enumerate(self.tail_kinds):
+            x, nc = self._apply_block(
+                kind, params["tail"][f"t{j}"], x, positions, caches.tail[j], decode=True
+            )
+            new_tail.append(nc)
+        x = norms.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = self.logits(params, x)
+        return logits, DecodeCaches(
+            scanned=new_scanned, tail=tuple(new_tail), pos=caches.pos + 1
+        )
+
+    def prefill(self, params, batch, max_len):
+        """Process a prompt, filling caches; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        caches = self.init_caches(B, max_len)
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        def scan_body(x, inp):
+            pblock, cache = inp
+            x, ncache = self._superblock(pblock, x, positions, cache, decode=False)
+            return x, ncache
+
+        x, new_scanned = jax.lax.scan(scan_body, x, (params["blocks"], caches.scanned))
+        new_tail = []
+        for j, kind in enumerate(self.tail_kinds):
+            x, nc = self._apply_block(
+                kind, params["tail"][f"t{j}"], x, positions, caches.tail[j]
+            )
+            new_tail.append(nc)
+        x = norms.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:])
+        return logits, DecodeCaches(
+            scanned=new_scanned, tail=tuple(new_tail), pos=jnp.asarray(S, jnp.int32)
+        )

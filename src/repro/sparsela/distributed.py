@@ -1,0 +1,68 @@
+"""Distributed implicit incidence products inside shard_map (paper §5.2).
+
+All functions here are *local* SPMD functions: they take the device's
+shard and use named-axis collectives. Mesh axes: ("data", "model") form
+the square G x G grid; device (i, j) holds edge cell (i, j) and the
+vertex-block-i shard of every vertex vector (replicated along "model").
+
+Communication per product (per device): one psum over each axis of a
+(block,) vector + one grid-transpose ppermute — O(n/G) words, matching
+the paper's 2-D layout analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["grid_transpose", "mx_local", "mtw_local", "vertex_psum_lse"]
+
+
+def _grid_perm(G: int):
+    """Flattened (data-major) permutation pairs for (i,j) -> (j,i)."""
+    return [(i * G + j, j * G + i) for i in range(G) for j in range(G)]
+
+
+def grid_transpose(x, G: int, axes=("data", "model")):
+    """Send this device's value to its transposed grid position."""
+    return lax.ppermute(x, axis_name=axes, perm=_grid_perm(G))
+
+
+def mx_local(u_loc, v_loc, mask, x_loc, block: int, G: int, axes=("data", "model")):
+    """y = M x with edge-sharded x. Returns the block-i shard of y
+    (replicated along the model axis).
+
+    u_loc/v_loc: (e_cell,) block-local endpoints; x_loc: (e_cell,).
+    """
+    xm = jnp.where(mask, x_loc, 0)
+    pu = jnp.zeros((block,), x_loc.dtype).at[u_loc].add(xm)
+    pv = jnp.zeros((block,), x_loc.dtype).at[v_loc].add(xm)
+    pu = lax.psum(pu, axes[1])  # complete u-sums for row-block i
+    pv = lax.psum(pv, axes[0])  # complete v-sums for col-block j
+    pv_t = grid_transpose(pv, G, axes)  # now v-sums for block i
+    return pu + pv_t
+
+
+def mtw_local(u_loc, v_loc, mask, w_loc, G: int, axes=("data", "model")):
+    """g = M^T w with vertex-sharded w (block i on row i, replicated on
+    model). Returns the edge-cell shard of g.
+
+    The row block w_i is resident; the column block w_j arrives via the
+    grid transpose (the paper's row+column broadcast)."""
+    w_col = grid_transpose(w_loc, G, axes)  # block j for this device
+    g = w_loc[u_loc] + w_col[v_loc]
+    return jnp.where(mask, g, 0)
+
+
+def vertex_psum_lse(a_loc, axes=("data", "model")):
+    """Stable distributed logsumexp over a vertex-sharded vector.
+
+    a_loc: (block,) local slice (same value on every model rank).
+    Returns (lse, local softmax numerator exp(a - m_global)); dividing by
+    sum gives the global softmax restricted to the local block.
+    """
+    m_loc = jnp.max(a_loc)
+    m = lax.pmax(m_loc, axes[0])  # model ranks replicate -> reduce data only
+    e = jnp.exp(a_loc - m)
+    s = lax.psum(jnp.sum(e), axes[0])
+    return m + jnp.log(s), e, s

@@ -1,0 +1,108 @@
+"""Loss + train_step factory.
+
+Cross-entropy is computed in sequence chunks (``loss_chunk``) so the
+(B, S, vocab) f32 logits tensor is never materialized — at the train_4k
+cell with a 256k vocab that tensor would be 1 TB. Microbatching
+(gradient accumulation via lax.scan) and bf16 compute with f32 master
+params come standard. The TP logit all-reduce and the DP gradient
+reduce-scatter both live inside this one jitted program, so XLA's
+scheduler can overlap them with compute (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import DP, TP, with_sharding
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["TrainState", "make_train_state", "make_train_step", "chunked_ce_loss"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    step: jax.Array
+
+
+def make_train_state(model, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=init_opt_state(params), step=jnp.zeros((), jnp.int32))
+
+
+def chunked_ce_loss(model, params, batch, chunk: int = 512):
+    """Next-token CE, chunked over the sequence. Uses batch['targets'] and
+    batch['loss_mask'] (mask also covers VLM patch positions & padding)."""
+    h = model.forward(params, batch)  # (B, S, d)
+    B, S, d = h.shape
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    head = (
+        params["embed"].T if model.cfg.tie_embeddings else params["lm_head"]
+    )
+
+    def ce_of(hs, ts, ms):
+        logits = (hs.astype(model.dt.compute) @ head.astype(model.dt.compute)).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * ms), jnp.sum(ms)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hs, ts, ms = xs
+        l, c = ce_of(hs, ts, ms)
+        return (tot + l, cnt + c), None
+
+    hc = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    tc = targets[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, tc, mc))
+    if rem:
+        l, c = ce_of(h[:, -rem:], targets[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, microbatches: int = 1, loss_chunk: int = 512):
+    """Returns train_step(state, batch) -> (state, metrics); jit-ready."""
+
+    def loss_fn(params, batch):
+        return chunked_ce_loss(model, params, batch, chunk=loss_chunk)
+
+    def train_step(state: TrainState, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                mb = B // microbatches
+                return x.reshape(microbatches, mb, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                return (tot_l + l, jax.tree.map(jnp.add, tot_g, g)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.zeros(()), zero_g), mbatches)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,436 @@
+"""Trip-count-aware HLO-text analyzer for the roofline terms.
+
+Why this exists: ``compiled.cost_analysis()`` visits each ``while`` body
+exactly once, so a model scanned over L layers under-reports FLOPs,
+bytes and (entirely absent) collective traffic by ~L x. The dry-run's
+roofline (EXPERIMENTS.md §Roofline) therefore derives its three terms
+from the *scheduled HLO text* of the compiled executable:
+
+  * FLOPs       — 2 * numel(out) * K for every dot (batch/contracting
+                  dims decoded from the dot attributes), plus a
+                  1-flop/element estimate for fusion outputs;
+  * HBM bytes   — per top-level op: operand + output sizes, where
+                  operands of slice-like access patterns (dynamic-slice
+                  / dynamic-update-slice / gather, including when fused)
+                  are charged at their slice size — this is post-fusion
+                  HBM traffic, not intra-fusion register traffic;
+  * collective wire bytes per device — ring formulas per op kind:
+        all-reduce         2 (g-1)/g * size
+        all-gather           (g-1)/g * size          (size = output)
+        reduce-scatter       (g-1)   * size          (size = output)
+        all-to-all           (g-1)/g * size
+        collective-permute             size
+
+  with every ``while(cond, body)`` contribution multiplied by the trip
+  count recovered from the loop-bound constant in the condition
+  computation (max s32/s64 literal — exact for lax.scan/fori loops).
+
+Validated against closed-form expectations in tests/test_hlo_analyzer.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["analyze_hlo", "HloReport"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SKIP_BYTES = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast", "iota",
+    "after-all", "broadcast", "reshape", "while", "conditional", "call",
+    "custom-call", "partition-id", "replica-id", "domain", "opt-barrier",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str  # operands + attrs (raw tail of the line)
+
+    @property
+    def operands(self):
+        # operand names appear before the closing paren of the call
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    head = self.rest[:i]
+                    break
+                depth -= 1
+        else:
+            head = self.rest
+        return re.findall(r"%([\w.\-]+)", head)
+
+    @property
+    def attrs(self):
+        return self.rest
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+@dataclass
+class HloReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_breakdown: dict = field(default_factory=dict)  # kind -> bytes
+    dot_flops: float = 0.0
+    fusion_flops: float = 0.0
+    n_collectives: int = 0
+    while_trips: dict = field(default_factory=dict)
+    # (kind, output type, group size, trip-multiplied wire bytes) top items
+    top_collectives: list = field(default_factory=list)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "dot_flops": self.dot_flops,
+            "fusion_flops": self.fusion_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_breakdown": dict(self.collective_breakdown),
+            "n_collectives": self.n_collectives,
+            "while_trips": dict(self.while_trips),
+            "top_collectives": list(self.top_collectives),
+        }
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if "/*" in line:  # strip /*index=N*/ tuple comments ('=' breaks _OP_RE)
+            line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and ("->" in line):
+                cur = _Comp(name=m.group(1))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = _Op(name=m.group(1), type_str=m.group(2), kind=m.group(3), rest=m.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    return comps
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    return max(num_partitions, 1)
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    out_numel = 1
+    for d in _shape_dims(op.type_str):
+        out_numel *= d
+    # contraction size from lhs operand shape
+    lhs_name = op.operands[0] if op.operands else None
+    lhs = comp.by_name.get(lhs_name)
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if lhs is not None and m and m.group(1):
+        dims = _shape_dims(lhs.type_str)
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(dims):
+                k *= dims[ci]
+    return 2.0 * out_numel * k
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Max integer literal in the condition computation (lax loop bound)."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        cn = stack.pop()
+        if cn in seen or cn not in comps:
+            continue
+        seen.add(cn)
+        for op in comps[cn].ops:
+            if op.kind == "constant":
+                m = re.match(r"\s*(\d+)\)", op.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+            for c in _CONST_RE.findall(op.rest):
+                best = max(best, int(c))
+            m = re.search(r"calls=%([\w.\-]+)", op.rest)
+            if m:
+                stack.append(m.group(1))
+    return best
+
+
+_PASS_THROUGH = {"bitcast", "reshape", "copy", "transpose", "convert", "bitcast-convert"}
+
+
+def _fusion_param_charges(comps, fusion_comp: str) -> dict[int, float]:
+    """Byte charge per fusion-parameter position for slice-accessed params.
+
+    A parameter whose every use-path flows only through pass-through ops
+    (bitcast/reshape/copy/transpose/convert) into the *sliced operand* of
+    a dynamic-slice / gather / dynamic-update-slice is charged at the sum
+    of the slice sizes (actual HBM traffic), not the full buffer — this
+    is how scanned layer stacks read their per-iteration slice.
+    Positions absent from the result are charged at full size.
+    """
+    comp = comps.get(fusion_comp)
+    if comp is None:
+        return {}
+    param_pos: dict[str, int] = {}
+    for op in comp.ops:
+        if op.kind == "parameter":
+            m = re.match(r"\s*(\d+)", op.rest)
+            if m:
+                param_pos[op.name] = int(m.group(1))
+    # users map: name -> list[(op, operand_index)]
+    users: dict[str, list] = {}
+    for op in comp.ops:
+        for i, o in enumerate(op.operands):
+            users.setdefault(o, []).append((op, i))
+
+    charges: dict[int, float] = {}
+    for pname, pos in param_pos.items():
+        ok = True
+        slice_bytes = 0.0
+        stack = [pname]
+        seen = set()
+        while stack and ok:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for op, i in users.get(cur, []):
+                if op.kind in _PASS_THROUGH:
+                    stack.append(op.name)
+                elif op.kind in ("dynamic-slice", "gather") and i == 0:
+                    slice_bytes += _shape_bytes(op.type_str)
+                elif op.kind == "dynamic-update-slice" and i == 0:
+                    # in-place window update: charged via the update operand
+                    upd = comp.by_name.get(op.operands[1])
+                    slice_bytes += _shape_bytes(upd.type_str) if upd else _shape_bytes(op.type_str)
+                else:
+                    ok = False
+                    break
+        if ok and slice_bytes > 0:
+            charges[pos] = slice_bytes
+    return charges
+
+
+def _op_bytes(op: _Op, comp: _Comp, comps) -> float:
+    """Post-fusion HBM bytes for one top-level op."""
+    out_b = _shape_bytes(op.type_str)
+    if op.kind in ("dynamic-slice", "gather"):
+        return 2.0 * out_b  # read slice + write output
+    if op.kind == "dynamic-update-slice":
+        upd = comp.by_name.get(op.operands[1]) if len(op.operands) > 1 else None
+        ub = _shape_bytes(upd.type_str) if upd is not None else out_b
+        return 2.0 * ub  # in-place: read+write the updated window
+    total = float(out_b)
+    charges: dict[int, float] = {}
+    if op.kind == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", op.rest)
+        if m:
+            charges = _fusion_param_charges(comps, m.group(1))
+            inner = comps.get(m.group(1))
+            if inner is not None:
+                # fusion rooted in an in-place window update (e.g. the
+                # remat stash write of a scanned layer stack): the write
+                # traffic is the update slice, not the whole buffer.
+                for iop in inner.ops:
+                    if iop.kind == "dynamic-update-slice" and _shape_bytes(
+                        iop.type_str
+                    ) == out_b:
+                        upd = inner.by_name.get(iop.operands[1]) if len(iop.operands) > 1 else None
+                        if upd is not None:
+                            total = float(_shape_bytes(upd.type_str))
+                        break
+    for i, name in enumerate(op.operands):
+        src = comp.by_name.get(name)
+        if src is None:
+            continue
+        if i in charges:
+            total += min(charges[i], _shape_bytes(src.type_str))
+            continue
+        total += _shape_bytes(src.type_str)
+    return total
+
+
+def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
+    comps = _parse(text)
+    rep = HloReport()
+    memo: dict[str, tuple] = {}
+
+    entry = None
+    m = re.search(r"entry_computation_layout", text)
+    # entry computation is the one marked ENTRY in the text
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if em:
+        entry = em.group(1)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+
+    ZERO = (0.0, 0.0, 0.0, 0.0, {}, 0, [])
+
+    def analyze_comp(name: str):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return ZERO
+        dflops = fflops = bytes_ = wire = 0.0
+        coll: dict[str, float] = {}
+        ncoll = 0
+        items: list = []
+
+        def absorb(res, mult=1):
+            nonlocal dflops, fflops, bytes_, wire, ncoll
+            df, ff, bb, bw, bc, bn, bi = res
+            dflops += mult * df
+            fflops += mult * ff
+            bytes_ += mult * bb
+            wire += mult * bw
+            ncoll += mult * bn
+            for k, v in bc.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for kind, ts, g, wb in bi:
+                items.append((kind, ts, g, mult * wb))
+
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "while":
+                cond = re.search(r"condition=%([\w.\-]+)", op.rest)
+                body = re.search(r"body=%([\w.\-]+)", op.rest)
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                rep.while_trips[op.name] = trips
+                if body:
+                    absorb(analyze_comp(body.group(1)), trips)
+                continue
+            if kind in ("call", "conditional", "async-start", "async-done"):
+                for target in re.findall(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?", op.rest):
+                    for t in re.findall(r"[\w.\-]+", target):
+                        if t in comps:
+                            absorb(analyze_comp(t))
+                continue
+            # collectives (match base kind; e.g. all-reduce-start)
+            base = next((c for c in _COLLECTIVES if kind.startswith(c)), None)
+            if base is not None:
+                g = _group_size(op.rest, num_partitions)
+                size = _shape_bytes(op.type_str)
+                if base == "all-reduce":
+                    w = 2.0 * (g - 1) / max(g, 1) * size
+                elif base == "all-gather":
+                    w = (g - 1) / max(g, 1) * size
+                elif base == "reduce-scatter":
+                    w = float(g - 1) * size
+                elif base == "all-to-all":
+                    w = (g - 1) / max(g, 1) * size
+                else:
+                    w = float(size)
+                wire += w
+                ncoll += 1
+                coll[base] = coll.get(base, 0.0) + w
+                items.append((base, op.type_str.strip(), g, w))
+                bytes_ += _op_bytes(op, comp, comps)
+                continue
+            if kind == "dot":
+                dflops += _dot_flops(op, comp)
+                bytes_ += _op_bytes(op, comp, comps)
+                continue
+            if kind == "fusion":
+                m2 = re.search(r"calls=%([\w.\-]+)", op.rest)
+                if m2 and m2.group(1) in comps:
+                    inner = comps[m2.group(1)]
+                    for iop in inner.ops:
+                        if iop.kind == "dot":
+                            dflops += _dot_flops(iop, inner)
+                        elif iop.kind not in _SKIP_BYTES:
+                            n = 1
+                            for d in _shape_dims(iop.type_str):
+                                n *= d
+                            fflops += n  # 1 flop/element estimate
+                bytes_ += _op_bytes(op, comp, comps)
+                continue
+            if kind in _SKIP_BYTES:
+                continue
+            bytes_ += _op_bytes(op, comp, comps)
+        memo[name] = (dflops, fflops, bytes_, wire, coll, ncoll, items)
+        return memo[name]
+
+    df, ff, b, w, c, n, items = analyze_comp(entry)
+    rep.dot_flops = df
+    rep.fusion_flops = ff
+    rep.flops = df + ff
+    rep.hbm_bytes = b
+    rep.collective_wire_bytes = w
+    rep.collective_breakdown = c
+    rep.n_collectives = n
+    # aggregate identical (kind, type, group) and keep the heaviest 12
+    agg: dict = {}
+    cnt: dict = {}
+    for kind, ts, g, wb in items:
+        key = (kind, ts, g)
+        agg[key] = agg.get(key, 0.0) + wb
+        cnt[key] = cnt.get(key, 0) + 1
+    top = sorted(agg.items(), key=lambda kv: -kv[1])[:12]
+    rep.top_collectives = [
+        {"kind": k[0], "type": k[1][:60], "group": k[2], "wire_bytes": v,
+         "count": cnt[k]}
+        for k, v in top
+    ]
+    return rep

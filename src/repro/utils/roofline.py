@@ -1,0 +1,73 @@
+"""Roofline terms from the HLO analysis (TPU v5e constants).
+
+    compute term    = HLO_FLOPs_per_device   / peak_FLOPs (197 TF bf16)
+    memory term     = HLO_bytes_per_device   / HBM bw     (819 GB/s)
+    collective term = wire_bytes_per_device  / ICI link bw (~50 GB/s)
+
+The analyzed HLO is the *partitioned* (per-device) module, so terms are
+per-device by construction. MODEL_FLOPS uses 6*N*D (train) / 2*N*D
+(inference) on *active* params plus explicit attention/SSM terms, giving
+the "useful compute" ratio that catches remat and masked-block waste.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+__all__ = ["roofline_terms", "model_flops_estimate", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+def roofline_terms(hlo_report, n_devices: int, model_flops: float | None = None) -> dict:
+    compute_s = hlo_report.flops / PEAK_FLOPS
+    memory_s = hlo_report.hbm_bytes / HBM_BW
+    collective_s = hlo_report.collective_wire_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "step_time_lb_s": max(terms.values()),
+    }
+    if model_flops is not None and hlo_report.flops > 0:
+        # useful-compute ratio: global model flops vs global compiled flops
+        out["model_flops_ratio"] = model_flops / (hlo_report.flops * n_devices)
+        out["mfu_upper_bound"] = model_flops / (
+            max(terms.values()) * n_devices * PEAK_FLOPS
+        )
+    return out
+
+
+def model_flops_estimate(cfg, cell) -> dict:
+    """Analytic MODEL_FLOPS for this (arch x shape) cell (global, per step)."""
+    B, S = cell.global_batch, cell.seq_len
+    train = cell.step == "train"
+    n_tokens = B * (S if cell.step != "decode" else 1)
+    mult = 6 if train else 2
+    n_active = cfg.n_active_params()
+    dense = mult * n_active * n_tokens
+
+    # attention score/value flops: 2 * 2 * B * S_q * S_kv_eff * H * dh per layer
+    attn = 0.0
+    n_attn = sum(1 for k in cfg.pattern() if k == "attn")
+    H, dh = cfg.n_heads, cfg.d_head
+    if cell.step == "decode":
+        kv = min(S, cfg.sliding_window or S)
+        attn = 4.0 * B * 1 * kv * H * dh * n_attn
+    else:
+        kv_eff = min(S, cfg.sliding_window or S)
+        # causal: ~half the square (full square for encoders)
+        frac = 1.0 if not cfg.causal else 0.5
+        attn = 4.0 * B * S * kv_eff * frac * H * dh * n_attn
+        if train:
+            attn *= 3  # fwd + 2x bwd
+    # SSD state flops: ~ (2*N*P*2) per token per head (state update + output)
+    ssd = 0.0
+    if cfg.ssm is not None:
+        Hs = cfg.ssm.n_heads(cfg.d_model)
+        n_ssm = sum(1 for k in cfg.pattern() if k == "ssm")
+        ssd = 4.0 * n_tokens * Hs * cfg.ssm.d_state * cfg.ssm.head_dim * n_ssm
+        if train:
+            ssd *= 3
+    total = dense + attn + ssd
+    return {"dense": dense, "attn": attn, "ssd": ssd, "total": total}

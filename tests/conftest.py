@@ -1,0 +1,32 @@
+"""Shared test configuration.
+
+x64 is enabled for the whole test session: the MWU solver's oracle tests
+compare against scipy in f64, and model code pins its own dtypes
+explicitly (f32/bf16) so it is unaffected.
+
+NOTE: tests intentionally see exactly ONE device — the multi-device
+distributed tests spawn subprocesses with their own XLA_FLAGS, per the
+dry-run isolation rule.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from repro.graphs import Graph, erdos, grid2d, kron, rgg
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    """A diverse bag of small graphs used across solver tests."""
+    return {
+        "grid6": grid2d(6),
+        "rgg10": rgg(10, seed=1),
+        "kron8": kron(8, seed=2, edgefactor=8),
+        "er": erdos(200, 600, seed=3),
+        "path": Graph.from_edges(5, np.array([[0, 1], [1, 2], [2, 3], [3, 4]]), "path5"),
+        "star": Graph.from_edges(6, np.array([[0, i] for i in range(1, 6)]), "star6"),
+        "triangle": Graph.from_edges(3, np.array([[0, 1], [1, 2], [0, 2]]), "tri"),
+    }

@@ -1,0 +1,156 @@
+"""MWU solver correctness: scipy-HiGHS oracle + infeasibility + invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from repro.core import Dense, MWUOptions, Status, solve, solve_traced
+from repro.core.mwu import init_x, make_eta
+from repro.core.smoothing import smax, smin, smax_weights, smin_weights
+
+
+def random_mixed_lp(rng, mp, mc, n, density=0.5):
+    P = rng.random((mp, n)) * (rng.random((mp, n)) < density)
+    C = rng.random((mc, n)) * (rng.random((mc, n)) < density)
+    # every column in P, every row of C nonempty (well-posedness)
+    P[rng.integers(0, mp), :] += 0.05
+    C[:, rng.integers(0, n)] += 0.05
+    return P, C
+
+
+def scipy_feasible(P, C):
+    r = linprog(
+        c=np.zeros(P.shape[1]),
+        A_ub=np.vstack([P, -C]),
+        b_ub=np.concatenate([np.ones(P.shape[0]), -np.ones(C.shape[0])]),
+        bounds=(0, None),
+        method="highs",
+    )
+    return r.success
+
+
+@pytest.mark.parametrize("rule", ["std", "binary", "newton"])
+def test_simple_feasible(rule):
+    # x <= 1 each; x1 + x2 >= 1 — trivially feasible
+    P = Dense(mat=jnp.eye(2))
+    C = Dense(mat=jnp.array([[0.9, 0.9]]))
+    opts = MWUOptions(eps=0.1, step_rule=rule, max_iter=20000)
+    res = solve(P, C, opts)
+    assert int(res.status) == Status.FEASIBLE
+    assert float(res.max_px) <= 1.1 + 1e-6
+    assert float(res.min_cx) >= 1.0
+
+
+@pytest.mark.parametrize("rule", ["binary", "newton"])
+def test_simple_infeasible(rule):
+    P = Dense(mat=jnp.eye(2))
+    C = Dense(mat=jnp.array([[1.0, 1.0]]) / 3.0)
+    res = solve(P, C, MWUOptions(eps=0.1, step_rule=rule))
+    assert int(res.status) == Status.INFEASIBLE
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_matches_scipy_feasibility(seed):
+    rng = np.random.default_rng(seed)
+    P, C = random_mixed_lp(rng, 8, 6, 12)
+    feas = scipy_feasible(P, C)
+    res = solve(
+        Dense(mat=jnp.asarray(P)),
+        Dense(mat=jnp.asarray(C)),
+        MWUOptions(eps=0.1, step_rule="newton", max_iter=30000),
+    )
+    st_ = int(res.status)
+    if feas:
+        assert st_ == Status.FEASIBLE, f"scipy feasible, mwu {Status.NAMES[st_]}"
+        # returned x certifies (1+eps) feasibility
+        x = np.asarray(res.x)
+        assert (P @ x <= 1.1 + 1e-6).all()
+        assert (C @ x >= 1.0 - 1e-9).all()
+    elif st_ == Status.FEASIBLE:
+        # MWU answers the (1+eps)-RELAXED problem: an exactly-infeasible LP
+        # may legitimately be (1+eps)-feasible (hypothesis found seed 1014).
+        # The claim is only valid if the relaxed certificate holds AND the
+        # relaxed LP is indeed feasible per the exact solver.
+        x = np.asarray(res.x)
+        assert (P @ x <= 1.1 + 1e-6).all()
+        assert (C @ x >= 1.0 - 1e-9).all()
+        assert scipy_feasible(P / 1.1, C), "relaxed LP must be exactly feasible"
+    else:
+        assert st_ in (Status.INFEASIBLE, Status.ITER_LIMIT)
+
+
+def test_solution_certificate_feasible_region():
+    rng = np.random.default_rng(42)
+    for _ in range(3):
+        P, C = random_mixed_lp(rng, 10, 5, 15)
+        if not scipy_feasible(P, C):
+            continue
+        res = solve(
+            Dense(mat=jnp.asarray(P)),
+            Dense(mat=jnp.asarray(C)),
+            MWUOptions(eps=0.05, step_rule="binary", max_iter=50000),
+        )
+        assert int(res.status) == Status.FEASIBLE
+        x = np.asarray(res.x)
+        assert (x >= 0).all()
+        assert (P @ x).max() <= 1.05 + 1e-6
+
+
+def test_traced_matches_jit():
+    rng = np.random.default_rng(3)
+    P, C = random_mixed_lp(rng, 8, 6, 12)
+    opts = MWUOptions(eps=0.1, step_rule="newton", max_iter=30000)
+    r1 = solve(Dense(mat=jnp.asarray(P)), Dense(mat=jnp.asarray(C)), opts)
+    r2, trace = solve_traced(Dense(mat=jnp.asarray(P)), Dense(mat=jnp.asarray(C)), opts)
+    assert int(r1.status) == int(r2.status)
+    assert abs(int(r1.iters) - int(r2.iters)) <= 1
+    if int(r1.status) == Status.FEASIBLE:
+        assert trace["max_violation"][-1] <= 0.1 + 1e-9
+
+
+def test_x_monotone_nondecreasing():
+    """MWU only ever adds nonnegative multiples of x (multiplicative update)."""
+    rng = np.random.default_rng(5)
+    P, C = random_mixed_lp(rng, 6, 4, 8)
+    if not scipy_feasible(P, C):
+        pytest.skip("draw infeasible")
+    Pd, Cd = Dense(mat=jnp.asarray(P)), Dense(mat=jnp.asarray(C))
+    opts = MWUOptions(eps=0.1, step_rule="binary", max_iter=5000)
+    x0 = np.asarray(init_x(Pd, 0.1, jnp.float64))
+    res = solve(Pd, Cd, opts)
+    assert (np.asarray(res.x) >= x0 - 1e-15).all()
+
+
+def test_smoothing_bounds():
+    """smax in [max, max + log(m)/eta]; smin in [min - log(m)/eta, min]."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.random(100))
+    eta = make_eta(100, 0.1)
+    assert float(smax(v, eta)) >= float(v.max())
+    assert float(smax(v, eta)) <= float(v.max()) + np.log(100) / eta + 1e-12
+    assert float(smin(v, eta)) <= float(v.min())
+    assert float(smin(v, eta)) >= float(v.min()) - np.log(100) / eta - 1e-12
+    # gradients are probability vectors
+    np.testing.assert_allclose(float(smax_weights(v, eta).sum()), 1.0, rtol=1e-10)
+    np.testing.assert_allclose(float(smin_weights(v, eta).sum()), 1.0, rtol=1e-10)
+
+
+def test_smoothing_no_overflow_large_eta():
+    v = jnp.asarray([1e3, 0.0, -1e3])
+    eta = 1e4
+    assert np.isfinite(float(smax(v, eta)))
+    assert np.isfinite(float(smin(v, eta)))
+    w = smax_weights(v, eta)
+    assert np.isfinite(np.asarray(w)).all()
+
+
+def test_masked_covering_rows():
+    """Masked covering rows must not influence the solve."""
+    P = Dense(mat=jnp.eye(2))
+    # second covering row is absurd (x1+x2 >= 10) but masked out
+    C = Dense(mat=jnp.array([[0.9, 0.9], [10.0, 10.0]]))
+    mask = jnp.asarray([True, False])
+    res = solve(P, C, MWUOptions(eps=0.1, step_rule="newton"), c_mask=mask)
+    assert int(res.status) == Status.FEASIBLE

@@ -1,0 +1,175 @@
+"""Implicit operators vs dense materialization (paper §5.1.2).
+
+Property-based: on random graphs, every implicit operator must agree
+with its explicit dense matrix for matvec, rmatvec and colmax.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AdjacencyPlusId,
+    Coo,
+    Dense,
+    Incidence,
+    InterweavedId,
+    OnesRow,
+    ScaledRows,
+    Transposed,
+    VertexEdgePair,
+    VStack,
+)
+from repro.graphs import Graph
+
+
+def random_graph(rng, n, m):
+    e = rng.integers(0, n, size=(m, 2))
+    g = Graph.from_edges(n, e)
+    if g.m == 0:  # ensure at least one edge
+        g = Graph.from_edges(n, np.array([[0, 1]]))
+    return g
+
+
+def dense_incidence(g):
+    M = np.zeros((g.n, g.m))
+    M[g.u, np.arange(g.m)] = 1
+    M[g.v, np.arange(g.m)] = 1
+    return M
+
+
+def dense_adj_plus_id(g):
+    A = np.eye(g.n)
+    A[g.u, g.v] = 1
+    A[g.v, g.u] = 1
+    return A
+
+
+def dense_vertex_edge_pair(g):
+    O = np.zeros((g.n, 2 * g.m))
+    O[g.u, 2 * np.arange(g.m)] = 1
+    O[g.v, 2 * np.arange(g.m) + 1] = 1
+    return O
+
+
+def dense_interweaved(g):
+    W = np.zeros((g.m, 2 * g.m))
+    W[np.arange(g.m), 2 * np.arange(g.m)] = 1
+    W[np.arange(g.m), 2 * np.arange(g.m) + 1] = 1
+    return W
+
+
+def check_against_dense(op, D, rng, atol=1e-10):
+    m, n = D.shape
+    assert op.shape == (m, n)
+    x = rng.random(n)
+    y = rng.random(m)
+    np.testing.assert_allclose(np.asarray(op.matvec(jnp.asarray(x))), D @ x, atol=atol)
+    np.testing.assert_allclose(np.asarray(op.rmatvec(jnp.asarray(y))), D.T @ y, atol=atol)
+    np.testing.assert_allclose(
+        np.asarray(op.colmax()), D.max(axis=0), atol=atol
+    )
+    s = rng.random(m) + 0.1
+    np.testing.assert_allclose(
+        np.asarray(op.colmax(jnp.asarray(s))), (D * s[:, None]).max(axis=0), atol=atol
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 30), m=st.integers(1, 80))
+def test_incidence_matches_dense(seed, n, m):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n, m)
+    op = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    check_against_dense(op, dense_incidence(g), rng)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 30), m=st.integers(1, 80))
+def test_adj_plus_id_matches_dense(seed, n, m):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n, m)
+    op = AdjacencyPlusId(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    D = dense_adj_plus_id(g)
+    x = rng.random(g.n)
+    np.testing.assert_allclose(np.asarray(op.matvec(jnp.asarray(x))), D @ x, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(op.rmatvec(jnp.asarray(x))), D.T @ x, atol=1e-10)
+    s = rng.random(g.n) + 0.1
+    np.testing.assert_allclose(
+        np.asarray(op.colmax(jnp.asarray(s))), (D * s[:, None]).max(axis=0), atol=1e-10
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 30), m=st.integers(1, 80))
+def test_vertex_edge_pair_matches_dense(seed, n, m):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n, m)
+    op = VertexEdgePair(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    check_against_dense(op, dense_vertex_edge_pair(g), rng)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(1, 40))
+def test_interweaved_matches_dense(seed, m):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, max(3, m // 2 + 2), m)
+    op = InterweavedId(n_edges=g.m)
+    check_against_dense(op, dense_interweaved(g), rng)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_transposed_and_scaled(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 12, 30)
+    M = dense_incidence(g)
+    op = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    check_against_dense(Transposed(op), M.T, rng)
+    s = rng.random(g.n) + 0.25
+    check_against_dense(ScaledRows(scale=jnp.asarray(s), inner=op), s[:, None] * M, rng)
+
+
+def test_coo_and_vstack_and_onesrow():
+    rng = np.random.default_rng(7)
+    D = rng.random((6, 9)) * (rng.random((6, 9)) < 0.4)
+    r, c = np.nonzero(D)
+    op = Coo(rows=jnp.asarray(r, jnp.int32), cols=jnp.asarray(c, jnp.int32),
+             vals=jnp.asarray(D[r, c]), _shape=D.shape)
+    check_against_dense(op, D, rng)
+
+    cvec = rng.random(9) + 0.1
+    one = OnesRow(c=jnp.asarray(cvec), inv_bound=jnp.asarray(0.25))
+    check_against_dense(one, 0.25 * cvec[None, :], rng)
+
+    stk = VStack(ops=(op, one))
+    check_against_dense(stk, np.vstack([D, 0.25 * cvec[None, :]]), rng)
+
+
+def test_coo_padding_entries_are_inert():
+    # padded entries: val 0, arbitrary in-range indices
+    r = jnp.asarray([0, 1, 0], jnp.int32)
+    c = jnp.asarray([0, 1, 0], jnp.int32)
+    v = jnp.asarray([2.0, 3.0, 0.0])
+    op = Coo(rows=r, cols=c, vals=v, _shape=(2, 2))
+    x = jnp.asarray([1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), [2.0, 3.0])
+    np.testing.assert_allclose(np.asarray(op.rmatvec(x)), [2.0, 3.0])
+
+
+def test_incidence_edge_mask():
+    u = jnp.asarray([0, 1, 0], jnp.int32)
+    v = jnp.asarray([1, 2, 2], jnp.int32)
+    mask = jnp.asarray([True, True, False])
+    op = Incidence(u=u, v=v, n_vertices=3, edge_mask=mask)
+    x = jnp.ones(3)
+    # masked edge contributes nothing
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), [1.0, 2.0, 1.0])
+    np.testing.assert_allclose(np.asarray(op.rmatvec(jnp.asarray([1.0, 2.0, 4.0]))),
+                               [3.0, 6.0, 0.0])
+
+
+def test_materialize_roundtrip(small_graphs):
+    g = small_graphs["triangle"]
+    op = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
+    np.testing.assert_allclose(np.asarray(op.materialize()), dense_incidence(g))

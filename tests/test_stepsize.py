@@ -1,0 +1,125 @@
+"""Line-search invariants (paper §4: eq. 16, Prop. 4.2, Alg. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stepsize import (
+    binary_search_step,
+    make_probe_fn,
+    newton_step,
+    standard_step,
+)
+
+
+def random_state(rng, mp=12, mc=9, scale=0.3):
+    """A plausible mid-solve MWU state: y,z in (0,1), nonneg steps."""
+    y = jnp.asarray(rng.random(mp) * scale)
+    z = jnp.asarray(rng.random(mc) * scale)
+    dy = jnp.asarray(rng.random(mp) * 1e-3)
+    dz = jnp.asarray(rng.random(mc) * 1e-3 + 1e-5)
+    eta = jnp.asarray(50.0)
+    return y, z, dy, dz, eta
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_f_monotone_decreasing(seed):
+    """Prop 4.2: f(alpha) = Phi/Psi is monotone decreasing on R+."""
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    probe = make_probe_fn(y, z, dy, dz, eta)
+    alphas = np.geomspace(0.25, 4096.0, 20)
+    fs = np.array([float(probe(a).f) for a in alphas])
+    fs = fs[np.isfinite(fs)]
+    assert (np.diff(fs) <= 1e-9).all(), fs
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_binary_search_satisfies_invariant(seed):
+    """An accepted step (alpha >= 1) obeys the bang-for-buck invariant
+    f(alpha) >= 1. alpha < 1 means the solver declares INFEASIBLE and the
+    step is never applied (Alg. 2 line 12), so no invariant is required."""
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    res = binary_search_step(y, z, dy, dz, eta, ls_eps=0.1)
+    if float(res.alpha) < 1.0:
+        return
+    probe = make_probe_fn(y, z, dy, dz, eta)
+    f = float(probe(res.alpha).f)
+    assert bool(res.completes) or f >= 1.0 - 1e-7, (float(res.alpha), f)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_newton_satisfies_invariant(seed):
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    res = newton_step(y, z, dy, dz, eta, ls_eps=0.1)
+    if float(res.alpha) < 1.0:
+        return
+    probe = make_probe_fn(y, z, dy, dz, eta)
+    f = float(probe(res.alpha).f)
+    assert bool(res.completes) or f >= 1.0 - 1e-7, (float(res.alpha), f)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_search_alpha_at_least_one_when_f1_ok(seed):
+    """If f(1) >= 1 (feasible-direction case) the search returns alpha >= 1."""
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    probe = make_probe_fn(y, z, dy, dz, eta)
+    if float(probe(jnp.asarray(1.0)).f) < 1.0:
+        return
+    for fn in (binary_search_step, newton_step):
+        res = fn(y, z, dy, dz, eta, ls_eps=0.1)
+        assert float(res.alpha) >= 1.0 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_binary_beats_standard(seed):
+    """Line search never returns a smaller step than the standard alpha=1
+    when alpha=1 is admissible — that is the whole point of §4."""
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    probe = make_probe_fn(y, z, dy, dz, eta)
+    if float(probe(jnp.asarray(1.0)).f) < 1.0:
+        return
+    res = binary_search_step(y, z, dy, dz, eta, ls_eps=0.1)
+    std = standard_step(y, z, dy, dz, eta)
+    if bool(res.completes):
+        return  # completing steps are clamped to the smallest completing alpha
+    assert float(res.alpha) >= float(std.alpha) - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_completion_does_not_overshoot(seed):
+    """Completing steps return (nearly) the smallest covering-satisfying alpha."""
+    rng = np.random.default_rng(seed)
+    y, z, dy, dz, eta = random_state(rng)
+    # force completion to be reachable: make dz large
+    dz = dz * 1e5
+    res = binary_search_step(y, z, dy, dz, eta, ls_eps=0.05)
+    if not bool(res.completes):
+        return
+    mn = float(jnp.min(z + res.alpha * dz))
+    assert mn >= 1.0 - 1e-9
+    # halving the step (but not below 1) must NOT satisfy covering,
+    # i.e. alpha is within ~2x of minimal
+    half = max(float(res.alpha) * 0.5, 1.0)
+    if half < float(res.alpha) * 0.99:
+        mn_half = float(jnp.min(z + half * dz))
+        assert mn_half < 1.0 + 0.25, (mn, mn_half)
+
+
+def test_warm_start_reduces_probes():
+    rng = np.random.default_rng(0)
+    y, z, dy, dz, eta = random_state(rng)
+    cold = binary_search_step(y, z, dy, dz, eta, ls_eps=0.1)
+    warm = binary_search_step(y, z, dy, dz, eta, ls_eps=0.1, alpha0=cold.alpha)
+    assert int(warm.probes) <= int(cold.probes)
