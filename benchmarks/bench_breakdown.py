@@ -18,11 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Coo, Incidence, MWUOptions, Transposed
-from repro.core.mwu import init_x, make_eta
-from repro.core.smoothing import smax_and_weights, smin_and_weights
+from repro.core import Coo, Incidence, MWUOptions
+from repro.core.mwu import make_eta
+from repro.core.smoothing import smax_and_weights
 from repro.core.stepsize import binary_search_step
-from repro.graphs import build, rgg
+from repro.graphs import rgg
 
 from .common import Csv
 

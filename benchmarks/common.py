@@ -2,9 +2,7 @@
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 
-import numpy as np
 
 
 def timed(fn, *args, repeats=1, **kw):

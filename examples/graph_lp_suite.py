@@ -1,32 +1,38 @@
 """End-to-end Table-2-style run over a configurable graph suite.
 
-    PYTHONPATH=src python examples/graph_lp_suite.py [--scale 12] [--rule newton]
+    PYTHONPATH=src python examples/graph_lp_suite.py [--scale 12] [--rule newton] [--batch 4]
+
+--batch K > 1 evaluates K binary-search bounds per vmapped feasibility
+call (speculative bracket evaluation); --batch 1 reproduces the paper's
+sequential search.
 """
 import argparse
+import time
 
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import MWUOptions
-from repro.graphs import baselines, build, kron, rgg
+from repro.api import MWUOptions, Solver
+from repro.graphs import build, kron, rgg
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=int, default=12)
 ap.add_argument("--rule", default="newton", choices=["std", "binary", "newton"])
 ap.add_argument("--eps", type=float, default=0.1)
+ap.add_argument("--batch", type=int, default=4, help="bounds per vmapped feasibility call")
 args = ap.parse_args()
 
-import time
+solver = Solver(MWUOptions(eps=args.eps, step_rule=args.rule), batch_width=args.batch)
 
 for gname, g in [(f"rgg-{args.scale}", rgg(args.scale)),
                  (f"kron-{args.scale-2}", kron(args.scale - 2, edgefactor=8))]:
     print(f"\n== {gname}: |V|={g.n} |E|={g.m} ==")
     for problem in ["match", "vcover", "dom-set", "dense-sub"]:
-        lp = build(problem, g)
+        prob = build(problem, g)
         t0 = time.perf_counter()
-        res = lp.solve(MWUOptions(eps=args.eps, step_rule=args.rule))
+        sol = solver.solve(prob)
         dt = time.perf_counter() - t0
-        val = res.bound if problem == "dense-sub" else res.objective
+        val = sol.bound if problem == "dense-sub" else sol.objective
         print(f"{problem:10s} value={val:10.3f} time={dt:6.2f}s "
-              f"iters={res.mwu_iters_total} feas_calls={res.feasibility_calls}")
+              f"iters={sol.mwu_iters_total} feas_calls={sol.feasibility_calls}")

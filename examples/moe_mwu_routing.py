@@ -5,7 +5,6 @@ expert load under capacity constraints (fewer dropped tokens).
 
     PYTHONPATH=src python examples/moe_mwu_routing.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,24 +1,28 @@
-"""Quickstart: solve four graph LPs with MWU in ~30 seconds (CPU).
+"""Quickstart: solve four graph LPs through the repro.api facade (~30 s CPU).
 
     PYTHONPATH=src python examples/quickstart.py
+
+One declarative Problem per LP, one Solver for all of them; batch_width
+controls how many binary-search bounds are evaluated per vmapped XLA
+call (1 = the paper's sequential search).
 """
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import MWUOptions
+from repro.api import MWUOptions, Solver
 from repro.graphs import baselines, build, rgg
 
 g = rgg(11, seed=0)
 print(f"graph: rgg-11  |V|={g.n} |E|={g.m}")
-opts = MWUOptions(eps=0.1, step_rule="newton")
+solver = Solver(MWUOptions(eps=0.1, step_rule="newton"), batch_width=4)
 for problem in ["match", "vcover", "dom-set", "dense-sub"]:
-    lp = build(problem, g)
-    res = lp.solve(opts)
+    sol = solver.solve(build(problem, g))
     exact, _ = baselines.exact_lp(problem, g)
-    val = res.bound if problem == "dense-sub" else res.objective
+    val = sol.bound if problem == "dense-sub" else sol.objective
     print(
         f"{problem:10s} mwu={val:10.3f} exact={exact:10.3f} "
         f"rel={abs(val-exact)/max(exact,1e-12):6.3f} "
-        f"iters={res.mwu_iters_total:5d} probes={res.ls_probes_total}"
+        f"iters={sol.mwu_iters_total:5d} probes={sol.ls_probes_total} "
+        f"calls={sol.feasibility_calls}"
     )

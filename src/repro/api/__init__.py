@@ -1,0 +1,35 @@
+"""repro.api — the canonical public surface for graph-LP solving.
+
+Every graph LP (matching, vertex cover, dominating set, densest
+subgraph, generalized matching) is a declarative :class:`Problem`; one
+:class:`Solver` facade runs the MWU feasibility core over it — jitted,
+optionally io_callback-traced, and vmap-batched across binary-search
+bounds and graph instances. Build Problems with the pure builders in
+:mod:`repro.graphs.problems` (or by hand from :mod:`repro.core`
+operators), then::
+
+    from repro.api import Solver
+    from repro.graphs import build, rgg
+
+    sol = Solver().solve(build("match", rgg(10)))
+    print(sol.objective, sol.feasibility_calls)
+
+The legacy entry points (``core.solve`` / ``solve_traced``, the
+``core.feasibility`` binary-search drivers, ``ProblemLP.solve``) remain
+as thin shims over this module.
+"""
+from ..core.mwu import MWUOptions, MWUResult, Status
+from .problem import BOUND_MODES, SENSES, Problem
+from .solver import Solution, Solver, stack_problems
+
+__all__ = [
+    "Problem",
+    "Solution",
+    "Solver",
+    "stack_problems",
+    "MWUOptions",
+    "MWUResult",
+    "Status",
+    "SENSES",
+    "BOUND_MODES",
+]

@@ -1,0 +1,133 @@
+"""Declarative problem specs for the unified solver facade.
+
+A :class:`Problem` is a pytree-registered description of one graph LP:
+the implicit operators (P packing rows, C covering rows), an optional
+linear objective, optional row masks, binary-search bounds, and static
+metadata (sense, kind, how the search bound enters the feasibility LP).
+
+Because a Problem is a pytree whose search bound enters through array
+leaves (``OnesRow.inv_bound`` / ``ScaledRows.scale``), feasibility calls
+can be ``jax.vmap``-ed across bounds and across same-shape graph
+instances — the batched execution the DESIGN.md §5 note anticipates.
+
+``bound_mode`` declares how a candidate bound M builds the feasibility
+LP ``exists x >= 0 : P x <= 1, C x >= 1`` (paper §2.2, §3):
+
+* ``objective_covering`` — max <c,x> : covering row <c,x>/M >= 1 (packing LPs)
+* ``objective_packing``  — min <c,x> : packing  row <c,x>/M <= 1 (covering LPs)
+* ``scale_packing``      — scale every packing row by 1/M (densest subgraph's
+                           density bound D, eq. 15)
+* ``callable``           — escape hatch: ``make_ops(M) -> (P, C)`` (legacy
+                           ``densest_subgraph_search`` shim)
+* ``none``               — pure feasibility, no bound search
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.operators import LinOp, OnesRow, ScaledRows
+
+__all__ = ["Problem", "SENSES", "BOUND_MODES"]
+
+SENSES = ("max", "min", "feasibility")
+BOUND_MODES = ("objective_covering", "objective_packing", "scale_packing", "callable", "none")
+
+# pytree split: leaves may be traced / batched, aux must be hashable.
+_LEAF_FIELDS = ("P", "C", "c", "p_mask", "c_mask", "lo", "hi")
+_AUX_FIELDS = ("name", "kind", "sense", "bound_mode", "n_vars", "nnz", "make_ops")
+
+
+@dataclass
+class Problem:
+    """One graph LP, declaratively.
+
+    ``graph`` is host-side metadata only and is dropped by pytree
+    flattening (a ``Graph`` holds numpy arrays, which would poison jit
+    cache keys); everything the solver needs lives in the other fields.
+    """
+
+    name: str
+    kind: str  # "packing" | "covering" | "densest" | "mixed"
+    sense: str  # see SENSES
+    bound_mode: str  # see BOUND_MODES
+    P: LinOp | None = None
+    C: LinOp | None = None
+    c: Any = None  # optional (n,) nonnegative objective
+    p_mask: Any = None  # optional (m_p,) bool
+    c_mask: Any = None  # optional (m_c,) bool
+    lo: Any = 1.0  # binary-search bracket (feasible side depends on sense)
+    hi: Any = 1.0
+    n_vars: int = 0
+    nnz: int = 0
+    make_ops: Callable | None = None  # bound_mode="callable" only
+    graph: Any = None  # metadata; excluded from the pytree
+
+    def __post_init__(self):
+        if self.sense not in SENSES:
+            raise ValueError(f"sense must be one of {SENSES}, got {self.sense!r}")
+        if self.bound_mode not in BOUND_MODES:
+            raise ValueError(f"bound_mode must be one of {BOUND_MODES}, got {self.bound_mode!r}")
+
+    # -- feasibility instantiation ------------------------------------
+    def instantiate(self, bound=None):
+        """Build (P, C, p_mask, c_mask) for one candidate bound.
+
+        ``bound`` may be a python float (host-side sequential path) or a
+        traced scalar (under ``jax.vmap`` across bounds). The returned
+        operators feed straight into the core MWU driver.
+        """
+        if self.bound_mode == "none":
+            return self.P, self.C, self.p_mask, self.c_mask
+        if bound is None:
+            raise ValueError(f"problem {self.name!r} needs a bound (mode {self.bound_mode!r})")
+        if self.bound_mode == "callable":
+            P, C = self.make_ops(bound)
+            return P, C, self.p_mask, self.c_mask
+        b = jnp.asarray(bound)
+        if self.bound_mode == "objective_covering":
+            C = OnesRow(c=self.c, inv_bound=(1.0 / b).astype(self.c.dtype))
+            return self.P, C, self.p_mask, None
+        if self.bound_mode == "objective_packing":
+            P = OnesRow(c=self.c, inv_bound=(1.0 / b).astype(self.c.dtype))
+            return P, self.C, None, self.c_mask
+        # scale_packing: divide every packing row by the bound
+        scale = jnp.ones((self.P.shape[0],), b.dtype) / b
+        return ScaledRows(scale=scale, inner=self.P), self.C, self.p_mask, self.c_mask
+
+    @property
+    def feasible_side(self) -> str:
+        """Which end of [lo, hi] the feasibility predicate prefers.
+
+        "max" problems are feasible for small bounds (any achievable
+        objective), "min"/densest problems for large ones.
+        """
+        return "lo" if self.sense == "max" else "hi"
+
+    # -- convenience --------------------------------------------------
+    def solve(self, opts=None, **solver_kwargs):
+        """Solve with a default :class:`repro.api.Solver`."""
+        from .solver import Solver
+
+        return Solver(opts, **solver_kwargs).solve(self)
+
+
+def _flatten(p: Problem):
+    return tuple(getattr(p, f) for f in _LEAF_FIELDS), tuple(getattr(p, f) for f in _AUX_FIELDS)
+
+
+def _unflatten(aux, leaves):
+    kw = dict(zip(_LEAF_FIELDS, leaves))
+    kw.update(dict(zip(_AUX_FIELDS, aux)))
+    # bypass __post_init__ validation: leaves may be tracers mid-transform
+    obj = object.__new__(Problem)
+    for k, v in kw.items():
+        object.__setattr__(obj, k, v)
+    object.__setattr__(obj, "graph", None)
+    return obj
+
+
+jax.tree_util.register_pytree_node(Problem, _flatten, _unflatten)

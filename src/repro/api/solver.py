@@ -1,0 +1,305 @@
+"""One driver for every graph LP: bound search with vmap-batched feasibility.
+
+``Solver`` turns a declarative :class:`~repro.api.problem.Problem` into a
+:class:`Solution` by reducing optimization to feasibility (paper §2.2)
+and searching the objective bound. Two execution modes:
+
+* ``batch_width == 1`` — the paper's sequential geometric binary search,
+  one jitted feasibility solve per probe (exactly the legacy
+  ``core.feasibility`` drivers).
+* ``batch_width K > 1`` — speculative bracket evaluation (DESIGN.md §5
+  note): each round instantiates K candidate bounds and ``jax.vmap``s
+  the MWU ``lax.while_loop`` across them in ONE XLA call, shrinking the
+  bracket by ~(K+1)x per round instead of 2x. The parallel-LP analogue
+  of Allen-Zhu & Orecchia / Wang et al.'s width-parallelism.
+
+``solve_batch`` exposes the raw fan-out: batched ``MWUResult`` across an
+array of bounds, optionally also across stacked same-shape graph
+instances (``stack_problems``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mwu import MWUOptions, MWUResult, Status, _run, solve, solve_traced
+from .problem import Problem
+
+__all__ = ["Solution", "Solver", "stack_problems"]
+
+
+@dataclass
+class Solution:
+    """Unified result of a ``Solver`` run.
+
+    ``objective`` is the certified value of ``x`` after the (1+eps)
+    rescale (max: divide by packing overshoot; min: exploit covering
+    slack); for densest-subgraph it is the certified density bound.
+    ``trace`` (optional) is a list of per-feasibility-call dicts from the
+    io_callback trace hook, each with the probed ``bound`` plus the
+    ``max_violation`` / ``alpha`` / ``probes`` arrays of Figure 3.
+    """
+
+    problem: str
+    status: int  # core Status code of the certifying solve
+    x: np.ndarray | None  # best feasible solution (original variables)
+    objective: float
+    bound: float  # final binary-search bound
+    max_px: float  # certificates at exit
+    min_cx: float
+    feasibility_calls: int
+    mwu_iters_total: int
+    ls_probes_total: int
+    last_result: MWUResult | None = None
+    trace: list | None = None
+
+    @property
+    def found(self) -> bool:
+        return self.x is not None
+
+    @property
+    def feasible(self) -> bool:
+        return self.status == Status.FEASIBLE and self.found
+
+
+@partial(jax.jit, static_argnames=("opts", "problem_axis"))
+def _feasibility_batch(problem: Problem, bounds, opts: MWUOptions, problem_axis):
+    """vmap the MWU while_loop across bounds (and optionally instances)."""
+
+    def one(prob, b):
+        P, C, pm, cm = prob.instantiate(b)
+        return _run(P, C, opts, pm, cm)
+
+    return jax.vmap(one, in_axes=(problem_axis, 0))(problem, bounds)
+
+
+def stack_problems(problems: list[Problem]) -> Problem:
+    """Tree-stack same-shape Problems for instance-batched ``solve_batch``.
+
+    All problems must share pytree structure and leaf shapes (same
+    vertex/edge counts — pad with ``edge_mask`` when they differ).
+    """
+    return jax.tree.map(lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]), *problems)
+
+
+class Solver:
+    """The public facade: Problem in, Solution out.
+
+    Parameters
+    ----------
+    opts:        core MWU configuration (eps, step rule, iteration cap).
+    batch_width: feasibility probes evaluated per search round in one
+                 vmapped XLA call; 1 reproduces the paper's sequential
+                 binary search.
+    rel_tol:     bound-search granularity (default eps/2, so the search
+                 does not compound the solver's eps past the paper's
+                 acceptance band).
+    max_calls:   total feasibility-solve budget per ``solve``.
+    """
+
+    def __init__(
+        self,
+        opts: MWUOptions | None = None,
+        *,
+        batch_width: int = 4,
+        rel_tol: float | None = None,
+        max_calls: int = 64,
+    ):
+        self.opts = opts if opts is not None else MWUOptions()
+        if batch_width < 1:
+            raise ValueError("batch_width must be >= 1")
+        self.batch_width = int(batch_width)
+        self.rel_tol = rel_tol
+        self.max_calls = int(max_calls)
+
+    # -- feasibility primitives ---------------------------------------
+    def feasible(self, problem: Problem, bound=None, trace: bool = False):
+        """One feasibility solve at a concrete bound.
+
+        Returns ``MWUResult`` (or ``(MWUResult, trace_dict)`` with
+        ``trace=True``). Instantiates the operators host-side so the
+        core jit cache is keyed on operator structure, not on the bound.
+        """
+        P, C, pm, cm = problem.instantiate(bound)
+        if trace:
+            return solve_traced(P, C, self.opts, p_mask=pm, c_mask=cm)
+        return solve(P, C, self.opts, p_mask=pm, c_mask=cm)
+
+    def solve_batch(self, problem: Problem, bounds, *, batched_problem: bool = False) -> MWUResult:
+        """Batched feasibility: vmap the MWU loop across ``bounds``.
+
+        One XLA call evaluates every bound concurrently (speculative
+        bracket evaluation). With ``batched_problem=True``, ``problem``
+        must carry a leading batch axis on every leaf (see
+        :func:`stack_problems`) matching ``bounds`` — fan-out across
+        independent graph instances.
+
+        Returns an ``MWUResult`` whose every field has leading dim
+        ``len(bounds)``.
+        """
+        bounds = jnp.atleast_1d(jnp.asarray(bounds))
+        return _feasibility_batch(problem, bounds, self.opts, 0 if batched_problem else None)
+
+    # -- the unified optimization driver ------------------------------
+    def solve(self, problem: Problem, *, trace: bool = False) -> Solution:
+        """Optimize ``problem`` via bound search over feasibility calls."""
+        if problem.bound_mode == "none":
+            return self._solve_feasibility(problem, trace)
+        return self._bound_search(problem, trace)
+
+    # pure feasibility problems skip the search entirely
+    def _solve_feasibility(self, problem: Problem, trace: bool) -> Solution:
+        traces = None
+        if trace:
+            res, tr = self.feasible(problem, trace=True)
+            traces = [dict(bound=float("nan"), **tr)]
+        else:
+            res = self.feasible(problem)
+        ok = int(res.status) == Status.FEASIBLE
+        return Solution(
+            problem=problem.name,
+            status=int(res.status),
+            x=np.asarray(res.x) if ok else None,
+            objective=float("nan"),
+            bound=float("nan"),
+            max_px=float(res.max_px),
+            min_cx=float(res.min_cx),
+            feasibility_calls=1,
+            mwu_iters_total=int(res.iters),
+            ls_probes_total=int(res.ls_probes),
+            last_result=res,
+            trace=traces,
+        )
+
+    def _probe(self, problem, bounds, trace, traces, stats):
+        """Evaluate feasibility at each bound; batched when width allows."""
+        outs = []
+        if len(bounds) > 1 and not trace:
+            batch = self.solve_batch(problem, jnp.asarray(bounds))
+            status = np.asarray(batch.status)
+            for j, b in enumerate(bounds):
+                lane = jax.tree.map(lambda a: a[j], batch)
+                outs.append((int(status[j]) == Status.FEASIBLE, lane))
+        else:
+            for b in bounds:
+                if trace:
+                    res, tr = self.feasible(problem, b, trace=True)
+                    traces.append(dict(bound=float(b), **tr))
+                else:
+                    res = self.feasible(problem, b)
+                outs.append((int(res.status) == Status.FEASIBLE, res))
+        stats["calls"] += len(bounds)
+        stats["iters"] += sum(int(r.iters) for _, r in outs)
+        stats["probes"] += sum(int(r.ls_probes) for _, r in outs)
+        return outs
+
+    def _bound_search(self, problem: Problem, trace: bool) -> Solution:
+        is_max = problem.feasible_side == "lo"
+        lo, hi = float(problem.lo), float(problem.hi)
+        rel = self.rel_tol if self.rel_tol is not None else self.opts.eps / 2
+        K = 1 if trace else self.batch_width
+        stats = {"calls": 0, "iters": 0, "probes": 0}
+        traces: list = [] if trace else None
+        best = best_bound = None
+
+        # min-like senses: the feasible side is hi; the legacy drivers
+        # check it up front and bail immediately when even hi fails.
+        # (With K > 1 the endpoint could ride along in round 1's batch,
+        # but checking it alone first keeps the not-found exit cheap.)
+        if not is_max:
+            (ok, res), = self._probe(problem, [hi], trace, traces, stats)
+            if not ok:
+                return self._not_found(problem, hi, res, stats, traces)
+            best, best_bound = res, hi
+
+        first = True
+        while hi / max(lo, 1e-300) > 1.0 + rel and stats["calls"] < self.max_calls:
+            r = hi / max(lo, 1e-300)
+            if first and is_max and K > 1:
+                # fold the feasible-side endpoint lo into round 1's batch
+                pts = [lo * r ** (k / K) for k in range(K)]
+            else:
+                pts = [lo * r ** (k / (K + 1)) for k in range(1, K + 1)]
+            outs = self._probe(problem, pts, trace, traces, stats)
+            feas = [ok for ok, _ in outs]
+            if is_max:
+                # feasible for small bounds: push lo up to the largest
+                # feasible probe, pull hi down to the smallest infeasible.
+                f_idx = [i for i, ok in enumerate(feas) if ok]
+                if f_idx:
+                    j = f_idx[-1]
+                    lo, best, best_bound = pts[j], outs[j][1], pts[j]
+                else:
+                    if first and K > 1:  # round 1 included lo itself
+                        return self._not_found(problem, lo, outs[0][1], stats, traces)
+                i_idx = [i for i, ok in enumerate(feas) if not ok]
+                if i_idx:
+                    hi = pts[i_idx[0]]
+            else:
+                # feasible for large bounds: mirror image
+                f_idx = [i for i, ok in enumerate(feas) if ok]
+                if f_idx:
+                    j = f_idx[0]
+                    hi, best, best_bound = pts[j], outs[j][1], pts[j]
+                i_idx = [i for i, ok in enumerate(feas) if not ok]
+                if i_idx:
+                    lo = pts[i_idx[-1]]
+            first = False
+
+        if best is None:  # only reachable for sense="max" (lo never probed)
+            (ok, res), = self._probe(problem, [lo], trace, traces, stats)
+            if not ok:
+                return self._not_found(problem, lo, res, stats, traces)
+            best, best_bound = res, lo
+
+        return self._certify(problem, best, best_bound, stats, traces)
+
+    def _not_found(self, problem, bound, res, stats, traces) -> Solution:
+        return Solution(
+            problem=problem.name,
+            status=int(res.status),
+            x=None,
+            objective=0.0,
+            bound=float(bound),
+            max_px=float(res.max_px),
+            min_cx=float(res.min_cx),
+            feasibility_calls=stats["calls"],
+            mwu_iters_total=stats["iters"],
+            ls_probes_total=stats["probes"],
+            last_result=res,
+            trace=traces,
+        )
+
+    def _certify(self, problem, best, best_bound, stats, traces) -> Solution:
+        """Rescale the raw MWU point into a certified solution (§2.2)."""
+        x = np.asarray(best.x)
+        if problem.sense == "max":
+            # Px <= 1+eps: dividing by the overshoot certifies Px <= 1
+            # at an objective loss of at most (1+eps).
+            x = x / max(float(best.max_px), 1.0)
+            objective = float(np.dot(np.asarray(problem.c), x))
+        elif problem.bound_mode == "objective_packing":
+            # covering slack is free objective: x/min(Cx) stays feasible
+            x = x / max(float(best.min_cx), 1.0)
+            objective = float(np.dot(np.asarray(problem.c), x))
+        else:
+            # densest-style: the bound itself is the certified objective
+            objective = float(best_bound)
+        return Solution(
+            problem=problem.name,
+            status=int(best.status),
+            x=x,
+            objective=objective,
+            bound=float(best_bound),
+            max_px=float(best.max_px),
+            min_cx=float(best.min_cx),
+            feasibility_calls=stats["calls"],
+            mwu_iters_total=stats["iters"],
+            ls_probes_total=stats["probes"],
+            last_result=best,
+            trace=traces,
+        )

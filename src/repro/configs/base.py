@@ -6,8 +6,7 @@ smoke-test variant of the same family.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 __all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "MeshConfig", "ShardingProfile"]

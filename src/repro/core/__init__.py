@@ -1,9 +1,17 @@
 """Core MWU positive-LP solver (the paper's primary contribution).
 
 Layers: smoothing (smax/smin), operators (implicit graph LinOps),
-mwu (Algorithms 1-2), stepsize (Algorithm 3 + Newton), feasibility
-(optimization via binary search), gradient_descent (MPCSolver baseline),
-mwu_dist (2-D distributed solver, paper §5.2).
+mwu (Algorithms 1-2, one trace-unified lax.while_loop driver), stepsize
+(Algorithm 3 + Newton), feasibility (deprecated binary-search shims),
+gradient_descent (MPCSolver baseline), mwu_dist (2-D distributed
+solver, paper §5.2).
+
+The canonical public entry point is :mod:`repro.api` — declarative
+``Problem`` specs plus the ``Solver`` facade, which drives this
+module's feasibility core sequentially or vmap-batched across
+binary-search bounds and graph instances. ``solve`` / ``solve_traced``
+and the ``feasibility`` drivers remain for direct low-level use and
+backwards compatibility.
 """
 from .mwu import MWUOptions, MWUResult, Status, solve, solve_traced
 from .operators import (

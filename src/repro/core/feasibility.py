@@ -1,8 +1,17 @@
 """Optimization via feasibility + binary search (paper §2.2, §3).
 
-MWU solves *feasibility* mixed packing/covering LPs. Optimization
-problems are reduced to a sequence of feasibility questions by embedding
-the objective as one extra constraint row and binary-searching its bound:
+DEPRECATED SHIMS. The binary-search drivers that lived here are now the
+``batch_width=1`` mode of the unified :class:`repro.api.Solver`; these
+wrappers keep the original signatures and return types
+(:class:`BinarySearchResult`) while delegating to the new path. New code
+should build a declarative :class:`repro.api.Problem` and call
+``Solver.solve`` — with ``batch_width > 1`` the binary-search branches
+are evaluated speculatively in one vmapped XLA call (the DESIGN.md §5
+pod-parallel bounds note), instead of sequentially as the paper does.
+
+The reduction itself is unchanged: MWU solves *feasibility* mixed
+packing/covering LPs; optimization embeds the objective as one extra
+constraint row and binary-searches its bound:
 
 * pure packing    max <c,x> : Px <= 1   ->  add covering row <c,x>/M >= 1
 * pure covering   min <c,x> : Cx >= 1   ->  add packing  row <c,x>/M <= 1
@@ -11,11 +20,6 @@ the objective as one extra constraint row and binary-searching its bound:
 Because there is a single objective row, smin (resp. smax) over it is
 *exact*, which the theory rewards with a 2x step scale (handled by
 ``MWUOptions.pure`` auto-detection).
-
-Beyond-paper note (DESIGN.md §5): the binary-search branches are
-independent feasibility solves, so at pod scale the ``pod`` mesh axis can
-evaluate different bounds concurrently; here the reference driver runs
-them sequentially exactly as the paper does.
 """
 from __future__ import annotations
 
@@ -25,8 +29,8 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from .mwu import MWUOptions, MWUResult, Status, solve
-from .operators import LinOp, OnesRow, ScaledRows
+from .mwu import MWUOptions, MWUResult
+from .operators import LinOp
 
 __all__ = [
     "BinarySearchResult",
@@ -51,25 +55,23 @@ class BinarySearchResult:
         return self.x is not None
 
 
-def _bsearch(check: Callable[[float], tuple[bool, MWUResult]], lo: float, hi: float, rel_tol: float):
-    """Generic geometric binary search; check(bound) -> (feasible, result).
+def _from_solution(sol) -> BinarySearchResult:
+    return BinarySearchResult(
+        x=sol.x,
+        objective=sol.objective if sol.found else 0.0,
+        bound=sol.bound,
+        feasibility_calls=sol.feasibility_calls,
+        mwu_iters_total=sol.mwu_iters_total,
+        ls_probes_total=sol.ls_probes_total,
+        last_result=sol.last_result,
+    )
 
-    Maintains lo = best known feasible-side bound, hi = infeasible side
-    (direction depends on the caller's convention).
-    """
-    calls = iters = probes = 0
-    best = None
-    while hi / max(lo, 1e-300) > 1.0 + rel_tol and calls < 64:
-        mid = float(np.sqrt(lo * hi))
-        ok, res = check(mid)
-        calls += 1
-        iters += int(res.iters)
-        probes += int(res.ls_probes)
-        if ok:
-            lo, best = mid, res
-        else:
-            hi = mid
-    return lo, hi, best, calls, iters, probes
+
+def _solver(opts: MWUOptions, rel_tol):
+    # imported lazily: repro.api imports repro.core at module load
+    from ..api import Solver
+
+    return Solver(opts, batch_width=1, rel_tol=rel_tol)
 
 
 def maximize_packing(
@@ -80,36 +82,21 @@ def maximize_packing(
     opts: MWUOptions = MWUOptions(),
     rel_tol: float | None = None,
 ) -> BinarySearchResult:
-    """max <c, x>  s.t.  P x <= 1, x >= 0.
+    """max <c, x>  s.t.  P x <= 1, x >= 0.  (deprecated shim)
 
     ``lo`` must be an achievable objective value, ``hi`` an upper bound
     (from a combinatorial heuristic, see graphs/baselines.py).
     Feasible at M means objective >= M is reachable with Px <= (1+eps);
     dividing x by (1+eps) certifies objective >= M/(1+eps).
-
-    The bound search runs at eps/2 so its granularity does not compound
-    the solver's eps past the paper's acceptance band.
     """
-    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
+    from ..api import Problem
+
     c = jnp.asarray(c)
-
-    def check(M):
-        C = OnesRow(c=c, inv_bound=jnp.asarray(1.0 / M, c.dtype))
-        res = solve(P, C, opts)
-        return bool(res.status == Status.FEASIBLE), res
-
-    lo2, hi2, best, calls, iters, probes = _bsearch(check, lo, hi, rel_tol)
-    if best is None:  # even `lo` failed as a strict bound; retry at lo
-        ok, best = check(lo)
-        calls += 1
-        iters += int(best.iters)
-        probes += int(best.ls_probes)
-        if not ok:
-            return BinarySearchResult(None, 0.0, lo, calls, iters, probes, best)
-    scale = 1.0 + float(best.max_px - 1.0) if float(best.max_px) > 1.0 else 1.0
-    x = np.asarray(best.x) / scale
-    obj = float(jnp.dot(c, jnp.asarray(x)))
-    return BinarySearchResult(x, obj, lo2, calls, iters, probes, best)
+    prob = Problem(
+        name="packing", kind="packing", sense="max", bound_mode="objective_covering",
+        P=P, c=c, lo=float(lo), hi=float(hi), n_vars=P.shape[1], nnz=P.nnz,
+    )
+    return _from_solution(_solver(opts, rel_tol).solve(prob))
 
 
 def minimize_covering(
@@ -120,47 +107,19 @@ def minimize_covering(
     opts: MWUOptions = MWUOptions(),
     rel_tol: float | None = None,
 ) -> BinarySearchResult:
-    """min <c, x>  s.t.  C x >= 1, x >= 0.
+    """min <c, x>  s.t.  C x >= 1, x >= 0.  (deprecated shim)
 
     Feasible at M certifies opt <= M (1+eps); infeasible certifies opt > M.
     Searches the smallest feasible M in [lo, hi] at eps/2 granularity.
     """
-    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
+    from ..api import Problem
+
     c = jnp.asarray(c)
-    calls = iters = probes = 0
-    best = None
-    best_M = hi
-
-    def check(M):
-        P = OnesRow(c=c, inv_bound=jnp.asarray(1.0 / M, c.dtype))
-        res = solve(P, C, opts)
-        return bool(res.status == Status.FEASIBLE), res
-
-    lo_b, hi_b = lo, hi
-    # invariant: hi_b feasible (checked first), lo_b infeasible-or-unknown
-    ok, res = check(hi_b)
-    calls += 1
-    iters += int(res.iters)
-    probes += int(res.ls_probes)
-    if not ok:
-        return BinarySearchResult(None, 0.0, hi_b, calls, iters, probes, res)
-    best, best_M = res, hi_b
-    while hi_b / max(lo_b, 1e-300) > 1.0 + rel_tol and calls < 64:
-        mid = float(np.sqrt(lo_b * hi_b))
-        ok, res = check(mid)
-        calls += 1
-        iters += int(res.iters)
-        probes += int(res.ls_probes)
-        if ok:
-            hi_b, best, best_M = mid, res, mid
-        else:
-            lo_b = mid
-    x = np.asarray(best.x)
-    # covering slack is free objective: x/min(Cx) still satisfies Cx >= 1
-    slack = max(float(best.min_cx), 1.0)
-    x = x / slack
-    obj = float(jnp.dot(c, jnp.asarray(x)))
-    return BinarySearchResult(x, obj, best_M, calls, iters, probes, best)
+    prob = Problem(
+        name="covering", kind="covering", sense="min", bound_mode="objective_packing",
+        C=C, c=c, lo=float(lo), hi=float(hi), n_vars=C.shape[1], nnz=C.nnz,
+    )
+    return _from_solution(_solver(opts, rel_tol).solve(prob))
 
 
 def densest_subgraph_search(
@@ -170,35 +129,18 @@ def densest_subgraph_search(
     opts: MWUOptions = MWUOptions(),
     rel_tol: float | None = None,
 ) -> BinarySearchResult:
-    """min D s.t. the dual feasibility LP (15) is feasible.
+    """min D s.t. the dual feasibility LP (15) is feasible.  (deprecated shim)
 
     ``make_PC(D)`` builds (P, C) = (O/D, W). Feasible iff D >= rho*
     (the maximum density), so we search the smallest feasible D
-    (eps/2 granularity; see minimize_covering).
+    (eps/2 granularity; see minimize_covering). Prefer the declarative
+    ``graphs.problems.densest_subgraph_lp`` (bound_mode="scale_packing"),
+    which admits batched bound evaluation.
     """
-    rel_tol = opts.eps / 2 if rel_tol is None else rel_tol
-    calls = iters = probes = 0
+    from ..api import Problem
 
-    def check(D):
-        P, C = make_PC(D)
-        res = solve(P, C, opts)
-        return bool(res.status == Status.FEASIBLE), res
-
-    ok, best = check(hi)
-    calls += 1
-    iters += int(best.iters)
-    probes += int(best.ls_probes)
-    if not ok:
-        return BinarySearchResult(None, 0.0, hi, calls, iters, probes, best)
-    lo_b, hi_b, best_D = lo, hi, hi
-    while hi_b / max(lo_b, 1e-300) > 1.0 + rel_tol and calls < 64:
-        mid = float(np.sqrt(lo_b * hi_b))
-        ok, res = check(mid)
-        calls += 1
-        iters += int(res.iters)
-        probes += int(res.ls_probes)
-        if ok:
-            hi_b, best, best_D = mid, res, mid
-        else:
-            lo_b = mid
-    return BinarySearchResult(np.asarray(best.x), best_D, best_D, calls, iters, probes, best)
+    prob = Problem(
+        name="densest", kind="densest", sense="min", bound_mode="callable",
+        make_ops=make_PC, lo=float(lo), hi=float(hi),
+    )
+    return _from_solution(_solver(opts, rel_tol).solve(prob))

@@ -8,16 +8,19 @@ P, C entrywise nonnegative ``LinOp``s. The solver returns a
 (1+eps)-relative solution (P x <= (1+eps) 1, C x >= 1) or reports
 INFEASIBLE, in O~(eps^-3) iterations (eps^-2 for pure problems).
 
-Two drivers share one iteration body:
+One trace-unified driver serves every entry point: a single
+``lax.while_loop`` (the whole solve is one XLA program; all vector work
+between the two SpMVs of an iteration fuses, which is the XLA analogue
+of the paper's §5.1.3 loop fusion) with an optional ``io_callback``
+trace hook that streams per-iteration diagnostics (max violation, alpha,
+probes) to the host for the Figure-3 convergence studies.
 
-* ``solve``        — the production path: a single ``jax.jit``ted
-                     ``lax.while_loop`` (the whole solve is one XLA
-                     program; all vector work between the two SpMVs of an
-                     iteration fuses, which is the XLA analogue of the
-                     paper's §5.1.3 loop fusion).
-* ``solve_traced`` — python-stepped variant that records per-iteration
-                     diagnostics (max violation, alpha, probes) for the
-                     Figure-3 convergence studies.
+* ``solve``        — the production path (trace hook off).
+* ``solve_traced`` — same compiled loop with the trace hook on; kept as
+                     a thin shim for legacy callers. The canonical
+                     public surface is :mod:`repro.api` (``Solver`` /
+                     ``Problem``), which also vmaps this driver across
+                     binary-search bounds and graph instances.
 
 State kept across iterations (paper Alg. 2 lines 3, 10, 15): x and the
 constraint images y = Px, z = Cx and step images d_y = Pd, d_z = Cd, so
@@ -26,10 +29,9 @@ recomputing Px from scratch.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -199,11 +201,37 @@ def _finalize(opts: MWUOptions, carry: _Carry, p_mask, c_mask) -> MWUResult:
     )
 
 
-@partial(jax.jit, static_argnames=("opts", "has_p_mask", "has_c_mask"))
-def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask):
-    pm = p_mask if has_p_mask else None
-    cm = c_mask if has_c_mask else None
+class _TraceSink:
+    """Host-side accumulator fed by the in-loop ``io_callback`` hook.
 
+    Rows are (iteration, violation, alpha, probes) tuples; the iteration
+    index makes row order irrelevant, so the callback can stay unordered
+    (ordered effects are not supported inside ``lax.while_loop``).
+    Not thread-safe: one traced solve at a time.
+    """
+
+    def __init__(self):
+        self.rows: list | None = None
+
+
+_TRACE = _TraceSink()
+
+
+def _trace_emit(it, viol, alpha, probes):
+    if _TRACE.rows is not None:
+        _TRACE.rows.append((int(it), float(viol), float(alpha), int(probes)))
+
+
+def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False):
+    """The unified driver: one ``lax.while_loop`` for jit, vmap and tracing.
+
+    Masks are None-or-array at the python level (callers that need a
+    pytree-stable jit signature pass dummies through ``_solve_impl``).
+    With ``trace=True`` each iteration emits (it, violation, alpha,
+    probes) through an unordered ``io_callback`` into ``_TRACE``; the
+    hook must stay off under ``jax.vmap`` (io_callback has no batching
+    rule by default), which ``repro.api`` enforces.
+    """
     m = P.shape[0] + C.shape[0]
     dt = jnp.promote_types(P.colmax().dtype, C.colmax().dtype)
     dt = dt if jnp.issubdtype(dt, jnp.floating) else jnp.float32
@@ -231,9 +259,32 @@ def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask):
             & (carry.it < opts.max_iter)
         )
 
-    body = partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, pm, cm)
+    iter_body = partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, pm, cm)
+
+    if trace:
+        from jax.experimental import io_callback
+
+        def body(carry: _Carry) -> _Carry:
+            nxt = iter_body(carry)
+            viol = jnp.maximum(
+                jnp.maximum(_masked_max(carry.y, pm) - 1.0, 1.0 - _masked_min(carry.z, cm)),
+                0.0,
+            )
+            io_callback(_trace_emit, None, carry.it, viol, nxt.alpha_prev, nxt.probes - carry.probes)
+            return nxt
+
+    else:
+        body = iter_body
+
     carry = jax.lax.while_loop(cond, body, carry0)
     return _finalize(opts, carry, pm, cm)
+
+
+@partial(jax.jit, static_argnames=("opts", "has_p_mask", "has_c_mask", "trace"))
+def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask, trace=False):
+    pm = p_mask if has_p_mask else None
+    cm = c_mask if has_c_mask else None
+    return _run(P, C, opts, pm, cm, trace=trace)
 
 
 def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None) -> MWUResult:
@@ -246,44 +297,34 @@ def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_ma
 
 
 def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None):
-    """Python-stepped solve recording per-iteration diagnostics (Fig. 3).
+    """Tracing solve recording per-iteration diagnostics (Fig. 3).
 
-    Returns (MWUResult, trace) with trace = dict of numpy arrays:
-    ``max_violation`` = max(0, max(Px)-1, 1-min(Cx)), ``alpha``, ``probes``.
+    Same compiled ``lax.while_loop`` as :func:`solve`, with the
+    ``io_callback`` trace hook enabled. Returns (MWUResult, trace) with
+    trace = dict of numpy arrays: ``max_violation`` = max(0, max(Px)-1,
+    1-min(Cx)) sampled at the start of every iteration (plus the final
+    state when the loop exits before the iteration cap), ``alpha``,
+    ``probes``.
     """
-    m = P.shape[0] + C.shape[0]
-    x0 = init_x(P, opts.eps, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
-    dt = x0.dtype
-    eta = jnp.asarray(make_eta(m, opts.eps, opts.eta_factor), dt)
-    scale = (1.0 if opts.resolve_pure(P, C) else 0.5) / eta
-    step_fn = STEP_RULES[opts.step_rule]
+    hp, hc = p_mask is not None, c_mask is not None
+    pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
+    cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
+    _TRACE.rows = []
+    try:
+        res = _solve_impl(P, C, opts, pm, cmk, hp, hc, trace=True)
+        jax.block_until_ready(res.x)
+        jax.effects_barrier()
+        rows = sorted(_TRACE.rows)
+    finally:
+        _TRACE.rows = None
 
-    body = jax.jit(partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, p_mask, c_mask))
-
-    carry = _Carry(
-        x=x0,
-        y=P.matvec(x0).astype(dt),
-        z=C.matvec(x0).astype(dt),
-        it=jnp.zeros((), jnp.int32),
-        probes=jnp.zeros((), jnp.int32),
-        alpha_prev=jnp.ones((), dt),
-        status=jnp.int32(Status.RUNNING),
-    )
-    viol, alphas, probes = [], [], []
-    last_probes = 0
-    for _ in range(opts.max_iter):
-        mx = float(_masked_max(carry.y, p_mask))
-        mn = float(_masked_min(carry.z, c_mask))
-        viol.append(max(0.0, mx - 1.0, 1.0 - mn))
-        if mn >= 1.0 or int(carry.status) != Status.RUNNING:
-            break
-        prev_alpha = float(carry.alpha_prev)
-        carry = body(carry)
-        alphas.append(float(carry.alpha_prev))
-        probes.append(int(carry.probes) - last_probes)
-        last_probes = int(carry.probes)
-
-    res = _finalize(opts, carry, p_mask, c_mask)
+    viol = [r[1] for r in rows]
+    alphas = [r[2] for r in rows]
+    probes = [r[3] for r in rows]
+    if int(res.iters) < opts.max_iter:
+        # loop exited through its own condition: record the final state,
+        # matching the python-stepped driver this replaced.
+        viol.append(max(0.0, float(res.max_px) - 1.0, 1.0 - float(res.min_cx)))
     trace = {
         "max_violation": np.asarray(viol),
         "alpha": np.asarray(alphas),

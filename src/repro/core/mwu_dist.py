@@ -29,12 +29,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..sparsela.distributed import grid_transpose, mtw_local, mx_local
-from ..sparsela.partition import Partition2D, partition_edges
+from ..sparsela.distributed import mtw_local, mx_local
+from ..sparsela.partition import Partition2D
 from .mwu import Status, make_eta
 
 __all__ = ["dist_matching_solve", "DistMWUResult"]

@@ -26,7 +26,6 @@ returned for the Table-3 statistics.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

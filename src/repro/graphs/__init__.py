@@ -1,4 +1,10 @@
-"""Graph problems as positive LPs (paper §3) + generators + baselines."""
+"""Graph problems as positive LPs (paper §3) + generators + baselines.
+
+The builders here return declarative :class:`repro.api.Problem` specs;
+solve them with :class:`repro.api.Solver` (the canonical entry point)
+or via the ``Problem.solve`` convenience. ``ProblemLP`` is a deprecated
+alias of ``Problem``.
+"""
 from .graph import Graph
 from .generators import bipartite_ratings, erdos, grid2d, kron, rgg
 from .problems import (
@@ -9,6 +15,7 @@ from .problems import (
     densest_subgraph_lp,
     domset_lp,
     generalized_matching_lp,
+    generalized_matching_problem,
     matching_lp,
     vcover_lp,
 )
@@ -29,4 +36,5 @@ __all__ = [
     "domset_lp",
     "densest_subgraph_lp",
     "generalized_matching_lp",
+    "generalized_matching_problem",
 ]

@@ -6,7 +6,7 @@ Host-side state is numpy; ``device()`` returns jnp copies.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

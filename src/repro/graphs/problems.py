@@ -1,9 +1,11 @@
-"""Graph problems as positive LPs (paper §3).
+"""Graph problems as declarative positive LPs (paper §3).
 
-Each builder returns a :class:`ProblemLP` bundling the implicit operators,
-the objective, binary-search bounds derived from combinatorial heuristics
-(graphs/baselines.py), and a solve() entry point dispatching to the right
-feasibility driver.
+Each builder returns a :class:`repro.api.Problem` bundling the implicit
+operators, the objective, binary-search bounds derived from
+combinatorial heuristics (graphs/baselines.py), and the static metadata
+(sense, bound mode) the unified :class:`repro.api.Solver` needs. The
+builders are pure — no closures, no solver state — so Problems can be
+tree-stacked and vmapped across instances.
 
 | problem    | LP                                   | type          |
 |------------|--------------------------------------|---------------|
@@ -12,96 +14,77 @@ feasibility driver.
 | vcover     | min 1.x : M^T x >= 1                 | pure covering |
 | dom-set    | min 1.x : (I+A) x >= 1               | pure covering |
 | dense-sub  | min D : W z >= 1, O z <= D 1         | mixed, D-search |
-| gen-match  | exists x: M x <= ub, M x >= lb       | mixed feasibility |
+| gen-match  | exists x: lb <= M x <= ub, x <= 1    | mixed feasibility |
+
+``ProblemLP`` is a deprecated alias of ``Problem``: ``ProblemLP.solve``
+IS the new path (``Solver().solve``).
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field
-from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..api import Problem
 from ..core import (
     AdjacencyPlusId,
+    Coo,
     Incidence,
     InterweavedId,
-    MWUOptions,
     ScaledRows,
     Transposed,
     VertexEdgePair,
-    densest_subgraph_search,
-    maximize_packing,
-    minimize_covering,
-    solve,
+    VStack,
 )
 from . import baselines
 from .graph import Graph
 
 __all__ = ["ProblemLP", "matching_lp", "bmatching_lp", "vcover_lp", "domset_lp",
-           "densest_subgraph_lp", "generalized_matching_lp", "build", "PROBLEMS"]
+           "densest_subgraph_lp", "generalized_matching_lp",
+           "generalized_matching_problem", "build", "PROBLEMS"]
+
+# Deprecated alias: the old ProblemLP closure bundle is gone; builders
+# return declarative repro.api.Problem specs and .solve delegates to the
+# unified Solver facade.
+ProblemLP = Problem
 
 
-@dataclass
-class ProblemLP:
-    name: str
-    kind: str  # "packing" | "covering" | "densest" | "mixed"
-    graph: Graph
-    n_vars: int
-    solve_fn: Callable  # (MWUOptions) -> BinarySearchResult-like
-    lo: float
-    hi: float
-    sense: str  # "max" | "min" | "feasibility"
-    # diagnostics for benchmarks
-    nnz: int = 0
-
-    def solve(self, opts: MWUOptions = MWUOptions()):
-        return self.solve_fn(opts)
-
-
-def matching_lp(g: Graph, name="match") -> ProblemLP:
+def matching_lp(g: Graph, name="match") -> Problem:
     """max <1,x> : Mx <= 1 (eq. 6). Bounds via greedy maximal matching:
     greedy g_m has nu_int <= 2 g_m, and LP <= 3/2 nu_int <= 3 g_m."""
     P = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
     gm = max(baselines.greedy_maximal_matching(g), 1)
     lo, hi = float(gm), float(min(3.0 * gm, g.n / 2.0) + 1.0)
-    c = jnp.ones((g.m,))
-
-    def run(opts):
-        return maximize_packing(P, c, lo, hi, opts)
-
-    return ProblemLP(name, "packing", g, g.m, run, lo, hi, "max", nnz=P.nnz)
+    return Problem(
+        name=name, kind="packing", sense="max", bound_mode="objective_covering",
+        P=P, c=jnp.ones((g.m,)), lo=lo, hi=hi, n_vars=g.m, nnz=P.nnz, graph=g,
+    )
 
 
-def bmatching_lp(g: Graph) -> ProblemLP:
+def bmatching_lp(g: Graph) -> Problem:
     """Bipartite matching: LP is integral (no gap); bounds [g_m, 2 g_m]."""
     assert g.bipartite_split is not None, "bmatch requires a bipartite graph"
     P = Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
     gm = max(baselines.greedy_maximal_matching(g), 1)
     lo, hi = float(gm), float(2.0 * gm + 1.0)
-    c = jnp.ones((g.m,))
-
-    def run(opts):
-        return maximize_packing(P, c, lo, hi, opts)
-
-    return ProblemLP("bmatch", "packing", g, g.m, run, lo, hi, "max", nnz=P.nnz)
+    return Problem(
+        name="bmatch", kind="packing", sense="max", bound_mode="objective_covering",
+        P=P, c=jnp.ones((g.m,)), lo=lo, hi=hi, n_vars=g.m, nnz=P.nnz, graph=g,
+    )
 
 
-def vcover_lp(g: Graph) -> ProblemLP:
+def vcover_lp(g: Graph) -> Problem:
     """min <1,x> : M^T x >= 1 (eq. 10). LP duality: LP(vcover) = LP(match),
     so greedy matching g_m gives bounds [g_m, 2 g_m]."""
     C = Transposed(Incidence(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n))
     gm = max(baselines.greedy_maximal_matching(g), 1)
     lo, hi = max(float(gm) * 0.5, 0.5), float(2.0 * gm)
-    c = jnp.ones((g.n,))
-
-    def run(opts):
-        return minimize_covering(C, c, lo, hi, opts)
-
-    return ProblemLP("vcover", "covering", g, g.n, run, lo, hi, "min", nnz=C.nnz)
+    return Problem(
+        name="vcover", kind="covering", sense="min", bound_mode="objective_packing",
+        C=C, c=jnp.ones((g.n,)), lo=lo, hi=hi, n_vars=g.n, nnz=C.nnz, graph=g,
+    )
 
 
-def domset_lp(g: Graph) -> ProblemLP:
+def domset_lp(g: Graph) -> Problem:
     """min <1,x> : (I+A) x >= 1 (eq. 8). Greedy set-cover bound:
     greedy g_d <= (ln(Delta+1)+1) LP  =>  LP in [g_d / (ln(D+1)+1), g_d]."""
     C = AdjacencyPlusId(u=jnp.asarray(g.u), v=jnp.asarray(g.v), n_vertices=g.n)
@@ -109,33 +92,30 @@ def domset_lp(g: Graph) -> ProblemLP:
     dmax = int(g.degrees().max(initial=1))
     lo = max(float(gd) / (np.log(dmax + 1.0) + 1.0) * 0.5, 0.25)
     hi = float(gd) + 1.0
-    c = jnp.ones((g.n,))
-
-    def run(opts):
-        return minimize_covering(C, c, lo, hi, opts)
-
-    return ProblemLP("dom-set", "covering", g, g.n, run, lo, hi, "min", nnz=C.nnz)
+    return Problem(
+        name="dom-set", kind="covering", sense="min", bound_mode="objective_packing",
+        C=C, c=jnp.ones((g.n,)), lo=lo, hi=hi, n_vars=g.n, nnz=C.nnz, graph=g,
+    )
 
 
-def densest_subgraph_lp(g: Graph) -> ProblemLP:
+def densest_subgraph_lp(g: Graph) -> Problem:
     """min D : Wz >= 1, Oz <= D (eq. 15). Charikar peel rho_g: rho* in
-    [rho_g, 2 rho_g]; D feasible iff D >= rho*."""
+    [rho_g, 2 rho_g]; D feasible iff D >= rho*.
+
+    Declarative form of the old ``make_PC`` closure: the density bound D
+    scales the packing rows (``bound_mode="scale_packing"``), so bounds
+    enter through an array leaf and the search can be vmap-batched.
+    """
     u, v = jnp.asarray(g.u), jnp.asarray(g.v)
     W = InterweavedId(n_edges=g.m)
     O = VertexEdgePair(u=u, v=v, n_vertices=g.n)
     rho_g, _ = baselines.charikar_peel(g)
     rho_g = max(rho_g, 0.5)
     lo, hi = rho_g * 0.999, 2.0 * rho_g + 1.0
-
-    def make_PC(D):
-        P = ScaledRows(scale=jnp.full((g.n,), 1.0 / D), inner=O)
-        return P, W
-
-    def run(opts):
-        return densest_subgraph_search(make_PC, lo, hi, opts)
-
-    return ProblemLP("dense-sub", "densest", g, 2 * g.m, run, lo, hi, "min",
-                     nnz=W.nnz + O.nnz)
+    return Problem(
+        name="dense-sub", kind="densest", sense="min", bound_mode="scale_packing",
+        P=O, C=W, lo=lo, hi=hi, n_vars=2 * g.m, nnz=W.nnz + O.nnz, graph=g,
+    )
 
 
 def generalized_matching_lp(g: Graph, lb: np.ndarray, ub: np.ndarray):
@@ -146,17 +126,27 @@ def generalized_matching_lp(g: Graph, lb: np.ndarray, ub: np.ndarray):
     The x <= 1 box is appended as packing rows via an identity operator
     encoded as a Coo.
     """
-    import jax
-
     u, v = jnp.asarray(g.u), jnp.asarray(g.v)
     M = Incidence(u=u, v=v, n_vertices=g.n)
     ub = np.maximum(np.asarray(ub, np.float64), 1e-12)
     lb = np.asarray(lb, np.float64)
-    P = ScaledRows(scale=jnp.asarray(1.0 / ub), inner=M)
+    degree_rows = ScaledRows(scale=jnp.asarray(1.0 / ub), inner=M)
+    eye = jnp.arange(g.m, dtype=jnp.int32)
+    box_rows = Coo(rows=eye, cols=eye, vals=jnp.ones((g.m,)), _shape=(g.m, g.m))
+    P = VStack(ops=(degree_rows, box_rows))
     lb_safe = np.where(lb > 0, lb, 1.0)
     C = ScaledRows(scale=jnp.asarray(1.0 / lb_safe), inner=M)
     c_mask = jnp.asarray(lb > 0)
     return P, C, c_mask
+
+
+def generalized_matching_problem(g: Graph, lb: np.ndarray, ub: np.ndarray) -> Problem:
+    """Declarative :class:`Problem` form of :func:`generalized_matching_lp`."""
+    P, C, c_mask = generalized_matching_lp(g, lb, ub)
+    return Problem(
+        name="gen-match", kind="mixed", sense="feasibility", bound_mode="none",
+        P=P, C=C, c_mask=c_mask, n_vars=g.m, nnz=P.nnz + C.nnz, graph=g,
+    )
 
 
 PROBLEMS = {
@@ -168,5 +158,5 @@ PROBLEMS = {
 }
 
 
-def build(problem: str, g: Graph) -> ProblemLP:
+def build(problem: str, g: Graph) -> Problem:
     return PROBLEMS[problem](g)

@@ -1,5 +1,4 @@
 """Pure-jnp oracle for linesearch_probe."""
-import jax
 import jax.numpy as jnp
 
 

@@ -176,8 +176,6 @@ def run_mwu_cell(mesh_kind: str, scale: int = 22, edgefactor: int = 16):
     mesh; multi-pod runs pod-parallel bound search (DESIGN.md §5)."""
     from ..core.mwu_dist import make_pod_parallel_solver, _dist_solve_local
     from ..core.mwu import make_eta
-    import functools
-    from jax.sharding import PartitionSpec as PS
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "pod2"))
     n_dev = mesh.devices.size

@@ -10,13 +10,11 @@ Sharding vocabulary (DESIGN.md §5):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 __all__ = [
     "Dtypes",

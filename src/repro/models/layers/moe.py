@@ -22,7 +22,6 @@ Routers:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax

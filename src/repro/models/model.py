@@ -19,7 +19,7 @@ embeddings concatenated before the text tokens.
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ the paper's 2-D layout analysis.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -10,15 +10,11 @@ scheduler can overlap them with compute (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from ..models.common import DP, TP, with_sharding
 from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
 
 __all__ = ["TrainState", "make_train_state", "make_train_step", "chunked_ce_loss"]

@@ -1,0 +1,211 @@
+"""repro.api facade: golden parity vs legacy drivers + batched execution.
+
+Covers the unified Solver/Problem surface: (a) Solution objectives agree
+with the legacy binary-search drivers (now shims) and with exact LP
+values within the (1+eps) certificate band, (b) ``solve_batch`` vmaps
+feasibility calls across bounds in one XLA call and agrees with the
+sequential loop, (c) instance batching over tree-stacked Problems,
+(d) the io_callback trace hook, (e) Problem pytree mechanics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import MWUOptions, Problem, Solution, Solver, Status, stack_problems
+from repro.core import OnesRow, solve
+from repro.core.feasibility import (
+    densest_subgraph_search,
+    maximize_packing,
+    minimize_covering,
+)
+from repro.graphs import Graph, baselines, build, erdos, generalized_matching_lp
+from repro.graphs.problems import generalized_matching_problem
+
+EPS = 0.1
+OPTS = MWUOptions(eps=EPS, step_rule="newton", max_iter=20000)
+
+
+# ---------------------------------------------------------------- pytree --
+def test_problem_pytree_roundtrip(small_graphs):
+    prob = build("match", small_graphs["triangle"])
+    leaves, treedef = jax.tree_util.tree_flatten(prob)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.name == prob.name
+    assert back.sense == prob.sense
+    assert back.bound_mode == prob.bound_mode
+    assert back.n_vars == prob.n_vars
+    assert float(back.lo) == float(prob.lo)
+    # host-only metadata must NOT leak into jit cache keys
+    assert back.graph is None
+    np.testing.assert_array_equal(np.asarray(back.P.u), np.asarray(prob.P.u))
+
+
+def test_problem_validation():
+    with pytest.raises(ValueError):
+        Problem(name="x", kind="packing", sense="bogus", bound_mode="none")
+    with pytest.raises(ValueError):
+        Problem(name="x", kind="packing", sense="max", bound_mode="bogus")
+    prob = Problem(name="x", kind="packing", sense="max", bound_mode="objective_covering",
+                   P=None, c=jnp.ones((3,)))
+    with pytest.raises(ValueError):
+        prob.instantiate(None)  # bound required for objective modes
+
+
+# ------------------------------------------------- golden parity vs shims --
+@pytest.mark.parametrize("problem", ["match", "vcover", "dom-set", "dense-sub"])
+def test_solver_matches_legacy_and_exact(problem, small_graphs):
+    g = small_graphs["grid6"]
+    prob = build(problem, g)
+    exact, _ = baselines.exact_lp(problem, g)
+
+    # legacy shim path (sequential, batch_width=1) via the old signatures
+    if problem == "match":
+        legacy = maximize_packing(prob.P, prob.c, float(prob.lo), float(prob.hi), OPTS)
+    elif problem in ("vcover", "dom-set"):
+        legacy = minimize_covering(prob.C, prob.c, float(prob.lo), float(prob.hi), OPTS)
+    else:
+        def make_PC(D):
+            from repro.core import ScaledRows
+
+            return ScaledRows(scale=jnp.full((g.n,), 1.0 / D), inner=prob.P), prob.C
+
+        legacy = densest_subgraph_search(make_PC, float(prob.lo), float(prob.hi), OPTS)
+
+    sol = Solver(OPTS, batch_width=4).solve(prob)
+    assert isinstance(sol, Solution)
+    assert sol.found and legacy.found
+
+    val_new = sol.bound if problem == "dense-sub" else sol.objective
+    val_old = legacy.bound if problem == "dense-sub" else legacy.objective
+    # both are (1+eps)-certified: each within 1.5 eps of exact, and hence
+    # of each other within the combined band
+    assert abs(val_new - exact) / max(abs(exact), 1e-12) <= 1.5 * EPS
+    assert abs(val_old - exact) / max(abs(exact), 1e-12) <= 1.5 * EPS
+    assert abs(val_new - val_old) / max(abs(exact), 1e-12) <= 3.0 * EPS
+
+
+def test_solver_certificates(small_graphs):
+    """The returned x must itself satisfy the (1+eps) feasibility claims."""
+    g = small_graphs["rgg10"]
+    sol = Solver(OPTS, batch_width=4).solve(build("match", g))
+    x = sol.x
+    loads = np.zeros(g.n)
+    np.add.at(loads, g.u, x)
+    np.add.at(loads, g.v, x)
+    assert loads.max() <= 1.0 + 1e-6  # rescaled: strictly Px <= 1
+    assert (x >= 0).all()
+
+
+# ------------------------------------------------------ batched execution --
+def test_solve_batch_matches_sequential(small_graphs):
+    prob = build("match", small_graphs["grid6"])
+    bounds = np.geomspace(float(prob.lo), float(prob.hi), 3)
+    solver = Solver(OPTS)
+    batch = solver.solve_batch(prob, bounds)
+    # one vmapped XLA call: every result field carries the batch dim
+    assert batch.status.shape == (3,)
+    assert batch.x.shape == (3, prob.n_vars)
+    for j, b in enumerate(bounds):
+        res = solver.feasible(prob, float(b))
+        assert int(res.status) == int(np.asarray(batch.status)[j])
+        # same mathematical trajectory; XLA vectorization may round
+        # differently, so certificates agree only to float tolerance
+        assert abs(float(res.max_px) - float(np.asarray(batch.max_px)[j])) <= 5e-3
+        assert abs(int(res.iters) - int(np.asarray(batch.iters)[j])) <= max(2, int(res.iters) // 20)
+
+
+def test_solve_batch_speculative_search_uses_fanout(small_graphs):
+    """batch_width>1 must evaluate >= 2 bounds per call and finish in
+    fewer search rounds than the sequential driver."""
+    prob = build("vcover", small_graphs["grid6"])
+    seq = Solver(OPTS, batch_width=1).solve(prob)
+    fan = Solver(OPTS, batch_width=4).solve(prob)
+    assert fan.found and seq.found
+    assert abs(fan.objective - seq.objective) <= 3.0 * EPS * seq.objective
+    # fan-out probes more bounds total but that is the point: wall-clock
+    # rounds (calls / width) shrink
+    assert fan.feasibility_calls >= 2
+
+
+def test_stacked_instances_batch():
+    """vmap across independent graph instances (tree-stacked Problems)."""
+    gs = [erdos(60, 150, seed=s) for s in (0, 1)]
+    assert gs[0].m == gs[1].m  # generator pads/subsamples to exactly m
+    probs = [build("match", g) for g in gs]
+    stacked = stack_problems(probs)
+    bounds = jnp.asarray([np.sqrt(float(p.lo) * float(p.hi)) for p in probs])
+    solver = Solver(OPTS)
+    batch = solver.solve_batch(stacked, bounds, batched_problem=True)
+    assert batch.status.shape == (2,)
+    for j, (p, b) in enumerate(zip(probs, bounds)):
+        res = solver.feasible(p, float(b))
+        assert int(res.status) == int(np.asarray(batch.status)[j])
+
+
+# ----------------------------------------------------------------- trace --
+def test_traced_solve_records_convergence(small_graphs):
+    sol = Solver(OPTS).solve(build("match", small_graphs["star"]), trace=True)
+    assert sol.found
+    assert sol.trace is not None and len(sol.trace) == sol.feasibility_calls
+    for t in sol.trace:
+        assert {"bound", "max_violation", "alpha", "probes"} <= set(t)
+    # the certifying solve drove violation under eps
+    feas_traces = [t for t in sol.trace if len(t["max_violation"]) and t["max_violation"][-1] <= EPS + 1e-9]
+    assert feas_traces, "no traced call reached the eps band"
+
+
+# ------------------------------------------- feasibility-only + box rows --
+def test_feasibility_problem_facade():
+    g = Graph.from_edges(6, np.array([[0, i] for i in range(1, 6)]), "star6")
+    lb = np.zeros(6)
+    ub = np.full(6, 3.0)
+    lb[0] = 2.0
+    sol = Solver(OPTS).solve(generalized_matching_problem(g, lb, ub))
+    assert sol.feasible
+    assert np.isnan(sol.objective)  # feasibility problems have no objective
+    # the x <= 1 box rows must hold up to the (1+eps) packing slack
+    assert sol.x.max() <= 1.0 + EPS + 1e-6
+
+
+def test_generalized_matching_box_rows_bind():
+    """A single edge with lb = 1.5 is feasible WITHOUT the x <= 1 box
+    (x = 1.5) but infeasible with it — the box rows must exist."""
+    g = Graph.from_edges(2, np.array([[0, 1]]), "edge")
+    lb = np.array([1.5, 0.0])
+    ub = np.array([3.0, 3.0])
+    P, C, c_mask = generalized_matching_lp(g, lb, ub)
+    assert P.shape == (2 + 1, 1)  # two degree rows + one box row
+    res = solve(P, C, OPTS, c_mask=c_mask)
+    assert int(res.status) != Status.FEASIBLE
+
+
+def test_generalized_matching_box_rows_materialize():
+    g = Graph.from_edges(3, np.array([[0, 1], [1, 2]]), "path3")
+    ub = np.array([2.0, 2.0, 2.0])
+    P, _, _ = generalized_matching_lp(g, np.zeros(3), ub)
+    dense = np.asarray(P.materialize())
+    expect = np.vstack([
+        np.array([[1.0, 0.0], [1.0, 1.0], [0.0, 1.0]]) / ub[:, None],
+        np.eye(2),
+    ])
+    np.testing.assert_allclose(dense, expect)
+
+
+# ------------------------------------------------------- legacy entry pts --
+def test_legacy_problemlp_alias(small_graphs):
+    from repro.graphs import ProblemLP
+
+    prob = build("match", small_graphs["triangle"])
+    assert isinstance(prob, ProblemLP)  # deprecated alias of Problem
+    res = prob.solve(OPTS)  # ProblemLP.solve IS the new path
+    assert res.found
+
+
+def test_legacy_not_found_paths():
+    """Shim preserves the not-found contract when even the easy bound fails."""
+    # max <c,x> : x <= 1 (single var) cannot reach an objective of 10
+    P = OnesRow(c=jnp.ones((1,)), inv_bound=jnp.asarray(1.0))
+    res = maximize_packing(P, jnp.ones((1,)), 10.0, 20.0, OPTS)
+    assert not res.found
+    assert res.objective == 0.0

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import MWUOptions, Status, solve
-from repro.graphs import baselines, bipartite_ratings, build, generalized_matching_lp, grid2d, kron, rgg
+from repro.graphs import baselines, bipartite_ratings, build, generalized_matching_lp, kron, rgg
 from repro.graphs.problems import bmatching_lp
 
 EPS = 0.1

@@ -1,7 +1,6 @@
 """Roofline HLO analyzer vs closed-form expectations on known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.utils.hlo import analyze_hlo
 

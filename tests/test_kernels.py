@@ -3,7 +3,6 @@
 Every Pallas kernel is exercised over aligned and ragged (non-tile-
 multiple) shapes and f32/f64-input dtypes, as the deliverable requires.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

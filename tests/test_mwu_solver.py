@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need the 'test' extra")
 from hypothesis import given, settings, strategies as st
 from scipy.optimize import linprog
 

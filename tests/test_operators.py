@@ -6,12 +6,13 @@ with its explicit dense matrix for matvec, rmatvec and colmax.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need the 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     AdjacencyPlusId,
     Coo,
-    Dense,
     Incidence,
     InterweavedId,
     OnesRow,

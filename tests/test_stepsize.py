@@ -1,8 +1,9 @@
 """Line-search invariants (paper §4: eq. 16, Prop. 4.2, Alg. 3)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need the 'test' extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.stepsize import (

@@ -10,8 +10,8 @@ from repro.checkpoint.ckpt import latest_step, restore_latest, save, save_async,
 from repro.configs import ARCH_IDS, get
 from repro.data.synthetic import TokenPipeline
 from repro.models import Model
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
-from repro.train.step import TrainState, chunked_ce_loss, make_train_state, make_train_step
+from repro.train.optimizer import AdamWConfig, lr_at
+from repro.train.step import chunked_ce_loss, make_train_state, make_train_step
 
 
 def tiny_batch(cfg, B=2, S=32, seed=0):
