@@ -6,6 +6,7 @@
   fig5    bench_breakdown    component split + implicit-vs-explicit
   fig4    bench_scaling      distributed per-device work/comm vs grid
   roofline bench_roofline    dry-run roofline table (§Roofline source)
+  serving bench_serving      lpserve continuous batching vs sequential
 
 ``python -m benchmarks.run [section ...]`` — default: all. The solver
 benches enable x64 (paper runs in f64 on CPU; DESIGN.md §7).
@@ -21,7 +22,7 @@ def main() -> None:
 
     jax.config.update("jax_enable_x64", True)
 
-    sections = sys.argv[1:] or ["table2", "table3", "fig3", "fig5", "fig4", "roofline"]
+    sections = sys.argv[1:] or ["table2", "table3", "fig3", "fig5", "fig4", "roofline", "serving"]
     t00 = time.perf_counter()
     for s in sections:
         print(f"\n===== {s} =====", flush=True)
@@ -50,6 +51,10 @@ def main() -> None:
             from . import bench_roofline
 
             bench_roofline.run()
+        elif s == "serving":
+            from . import bench_serving
+
+            bench_serving.run()
         else:
             print(f"unknown section {s}")
         print(f"[{s}: {time.perf_counter()-t0:.1f}s]", flush=True)

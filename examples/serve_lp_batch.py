@@ -1,14 +1,20 @@
-"""Serving-style fan-out: many graph LP requests through one vmapped solve.
+"""Serving demo: mixed-size graph-LP traffic through repro.lpserve.
 
-    PYTHONPATH=src python examples/serve_lp_batch.py [--requests 8]
+    PYTHONPATH=src python examples/serve_lp_batch.py [--requests 12] [--lanes 8]
 
-The serving story for the LP engine mirrors serve/engine.py's slot
-batching for LMs: independent requests (same problem family, same
-padded shape) are tree-stacked into one batched Problem and the MWU
-while_loop runs across all of them in a single XLA call — one
-compilation, one dispatch, N answers. Here each "request" is a matching
-LP on an independent random graph; production would pad edge lists with
-``edge_mask`` to a common shape bucket.
+Heterogeneous requests (different graph sizes, multiple LP families) go
+through the :class:`repro.lpserve.LPEngine`: each problem is padded into
+its shape bucket via ``edge_mask``, bucket lanes are continuously
+refilled from the queue, and every dispatch round drives ONE vmapped
+``Solver.solve_batch`` per bucket — one compiled shape per (family,
+bucket) serving every request that lands there. Compare with the old
+version of this example, which required every request to share one
+padded-by-construction shape.
+
+The script doubles as the CI serving smoke test: it asserts every
+request returns a feasible certified Solution that matches the
+sequential ``Solver.solve`` objective, and that batching actually
+happened (fewer batches than feasibility calls).
 """
 import argparse
 import time
@@ -17,40 +23,62 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.api import MWUOptions, Solver, Status, stack_problems
+from repro.api import MWUOptions, Solver
 from repro.graphs import build, erdos
+from repro.lpserve import LPEngine, LPServeConfig
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--requests", type=int, default=8)
-ap.add_argument("--n", type=int, default=400)
-ap.add_argument("--m", type=int, default=1200)
+ap.add_argument("--requests", type=int, default=12)
+ap.add_argument("--lanes", type=int, default=8)
+ap.add_argument("--eps", type=float, default=0.1)
+ap.add_argument("--families", default="match,vcover")
 args = ap.parse_args()
 
-solver = Solver(MWUOptions(eps=0.1, step_rule="newton"))
+# three size tiers -> mixed-shape traffic (the thing the engine exists for)
+SIZE_TIERS = [(40, 100), (60, 160), (80, 220)]
+families = args.families.split(",")
+probs = []
+for i in range(args.requests):
+    n, m = SIZE_TIERS[i % len(SIZE_TIERS)]
+    probs.append(build(families[i % len(families)], erdos(n, m, seed=i)))
 
-# one matching "request" per client; erdos pads/subsamples to exactly m
-# edges so every instance shares the batch shape
-probs = [build("match", erdos(args.n, args.m, seed=s)) for s in range(args.requests)]
-stacked = stack_problems(probs)
-bounds = jnp.asarray([np.sqrt(float(p.lo) * float(p.hi)) for p in probs])
-
-t0 = time.perf_counter()
-batch = solver.solve_batch(stacked, bounds, batched_problem=True)
-jax.block_until_ready(batch.x)
-t_batch = time.perf_counter() - t0
+opts = MWUOptions(eps=args.eps, step_rule="newton")
+engine = LPEngine(LPServeConfig(opts=opts, lanes=args.lanes))
 
 t0 = time.perf_counter()
-seq = [solver.feasible(p, float(b)) for p, b in zip(probs, bounds)]
+sols = engine.solve_many(probs)
+t_engine = time.perf_counter() - t0
+
+solver = Solver(opts, batch_width=1)
+t0 = time.perf_counter()
+refs = [solver.solve(p) for p in probs]
 t_seq = time.perf_counter() - t0
 
-print(f"{args.requests} matching requests on er({args.n},{args.m}) graphs")
-print(f"batched : {t_batch:6.2f}s  (one vmapped XLA call)")
-print(f"looped  : {t_seq:6.2f}s  (per-request dispatch, shared jit cache)")
-status = np.asarray(batch.status)
-for j in range(args.requests):
-    ok = "feasible" if status[j] == Status.FEASIBLE else "infeasible"
-    print(f"  request {j}: bound={float(bounds[j]):8.2f} {ok} "
-          f"iters={int(np.asarray(batch.iters)[j])}")
+stats = engine.stats()
+print(f"{args.requests} mixed-size requests ({', '.join(families)}; "
+      f"tiers {SIZE_TIERS})")
+print(f"engine    : {t_engine:6.2f}s  ({stats['batches']} batches, "
+      f"{stats['feasibility_calls']} probes, "
+      f"occupancy {stats['lane_occupancy']:.0%}, "
+      f"padding waste {stats['padding_waste']:.0%})")
+print(f"sequential: {t_seq:6.2f}s  (per-request binary search)")
+print(f"compiles  : {stats['compiles']} "
+      f"(+{stats['compile_cache_hits']} cache hits); "
+      f"latency p50 {stats['latency_p50_s']:.2f}s p99 {stats['latency_p99_s']:.2f}s")
+for key, b in stats["buckets"].items():
+    print(f"  bucket {key:20s} requests={b['requests']:3d} batches={b['batches']:3d} "
+          f"occupancy={b['lane_occupancy']:.0%} waste={b['padding_waste']:.0%}")
+
+# smoke contract (the CI serving step relies on these asserts)
+for i, (p, sol, ref) in enumerate(zip(probs, sols, refs)):
+    assert sol.feasible, f"request {i} ({p.name} on {p.graph.name}): not feasible"
+    rel = abs(sol.objective - ref.objective) / max(abs(ref.objective), 1e-12)
+    assert rel <= 3.0 * args.eps, (
+        f"request {i}: engine objective {sol.objective:.4f} deviates "
+        f"{rel:.3f} from sequential {ref.objective:.4f}"
+    )
+    print(f"  request {i:2d}: {p.name:7s} {p.graph.name:8s} "
+          f"obj={sol.objective:8.3f} (seq {ref.objective:8.3f}) "
+          f"calls={sol.feasibility_calls}")
+assert stats["batches"] < stats["feasibility_calls"], "batching never kicked in"
+print("all requests feasible; engine objectives match sequential solve")

@@ -1,4 +1,11 @@
 """repro: MWU positive-LP solving (Ju et al., CS.DC 2023) as a multi-pod
-JAX framework. See DESIGN.md for the system inventory."""
+JAX framework. See DESIGN.md for the system inventory.
+
+Layers: :mod:`repro.core` (MWU feasibility kernel + implicit operators),
+:mod:`repro.graphs` (graph generators and declarative LP builders),
+:mod:`repro.api` (the ``Problem``/``Solver`` facade), and
+:mod:`repro.lpserve` (shape-bucketed continuous-batching serving engine
+for heterogeneous graph-LP request traffic).
+"""
 
 __version__ = "1.0.0"

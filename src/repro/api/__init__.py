@@ -16,7 +16,8 @@ operators), then::
 
 The legacy entry points (``core.solve`` / ``solve_traced``, the
 ``core.feasibility`` binary-search drivers, ``ProblemLP.solve``) remain
-as thin shims over this module.
+as thin shims over this module. For serving mixed-size request traffic
+through one compiled shape per bucket, see :mod:`repro.lpserve`.
 """
 from ..core.mwu import MWUOptions, MWUResult, Status
 from .problem import BOUND_MODES, SENSES, Problem

@@ -115,8 +115,11 @@ class Problem:
         return Solver(opts, **solver_kwargs).solve(self)
 
 
-def _flatten(p: Problem):
-    return tuple(getattr(p, f) for f in _LEAF_FIELDS), tuple(getattr(p, f) for f in _AUX_FIELDS)
+def _flatten_with_keys(p: Problem):
+    return (
+        tuple((jax.tree_util.GetAttrKey(f), getattr(p, f)) for f in _LEAF_FIELDS),
+        tuple(getattr(p, f) for f in _AUX_FIELDS),
+    )
 
 
 def _unflatten(aux, leaves):
@@ -130,4 +133,4 @@ def _unflatten(aux, leaves):
     return obj
 
 
-jax.tree_util.register_pytree_node(Problem, _flatten, _unflatten)
+jax.tree_util.register_pytree_with_keys(Problem, _flatten_with_keys, _unflatten)

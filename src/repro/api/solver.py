@@ -29,7 +29,14 @@ import numpy as np
 from ..core.mwu import MWUOptions, MWUResult, Status, _run, solve, solve_traced
 from .problem import Problem
 
-__all__ = ["Solution", "Solver", "stack_problems"]
+__all__ = [
+    "Solution",
+    "Solver",
+    "stack_problems",
+    "feasibility_solution",
+    "not_found_solution",
+    "certify_solution",
+]
 
 
 @dataclass
@@ -77,12 +84,53 @@ def _feasibility_batch(problem: Problem, bounds, opts: MWUOptions, problem_axis)
     return jax.vmap(one, in_axes=(problem_axis, 0))(problem, bounds)
 
 
+def _check_stackable(problems: list[Problem]) -> None:
+    """Raise a ValueError naming the first mismatched aux field / leaf."""
+    ref = problems[0]
+    ref_flat, ref_tree = jax.tree_util.tree_flatten_with_path(ref)
+    for i, p in enumerate(problems[1:], start=1):
+        if isinstance(ref, Problem) and isinstance(p, Problem):
+            for f in ("name", "kind", "sense", "bound_mode", "n_vars", "nnz", "make_ops"):
+                a, b = getattr(ref, f), getattr(p, f)
+                if a != b:
+                    raise ValueError(
+                        f"stack_problems: problem 0 and problem {i} differ in "
+                        f"static field {f!r}: {a!r} vs {b!r}; only problems of "
+                        "the same family can be instance-batched"
+                    )
+        flat, tree = jax.tree_util.tree_flatten_with_path(p)
+        if tree != ref_tree:
+            keys0 = {jax.tree_util.keystr(k) for k, _ in ref_flat}
+            keys = {jax.tree_util.keystr(k) for k, _ in flat}
+            diff = sorted(keys0.symmetric_difference(keys)) or ["<nested structure>"]
+            raise ValueError(
+                f"stack_problems: problem 0 and problem {i} have different "
+                f"pytree structure (mismatched leaves: {', '.join(diff)}); "
+                "pad differently-shaped problems into a common bucket first "
+                "(repro.lpserve.pad_problems)"
+            )
+        for (key, leaf0), (_, leaf) in zip(ref_flat, flat):
+            s0, s = jnp.shape(leaf0), jnp.shape(leaf)
+            if s0 != s:
+                raise ValueError(
+                    f"stack_problems: leaf {jax.tree_util.keystr(key)!r} has "
+                    f"shape {s} in problem {i} but {s0} in problem 0; pad "
+                    "differently-sized graphs into a common shape bucket "
+                    "first (repro.lpserve.pad_problems)"
+                )
+
+
 def stack_problems(problems: list[Problem]) -> Problem:
     """Tree-stack same-shape Problems for instance-batched ``solve_batch``.
 
     All problems must share pytree structure and leaf shapes (same
-    vertex/edge counts — pad with ``edge_mask`` when they differ).
+    vertex/edge counts — pad into a shape bucket with
+    :func:`repro.lpserve.pad_problems` when they differ). Mismatches
+    raise a ``ValueError`` naming the offending field or leaf.
     """
+    if not problems:
+        raise ValueError("stack_problems: need at least one problem")
+    _check_stackable(list(problems))
     return jax.tree.map(lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]), *problems)
 
 
@@ -159,21 +207,8 @@ class Solver:
             traces = [dict(bound=float("nan"), **tr)]
         else:
             res = self.feasible(problem)
-        ok = int(res.status) == Status.FEASIBLE
-        return Solution(
-            problem=problem.name,
-            status=int(res.status),
-            x=np.asarray(res.x) if ok else None,
-            objective=float("nan"),
-            bound=float("nan"),
-            max_px=float(res.max_px),
-            min_cx=float(res.min_cx),
-            feasibility_calls=1,
-            mwu_iters_total=int(res.iters),
-            ls_probes_total=int(res.ls_probes),
-            last_result=res,
-            trace=traces,
-        )
+        stats = {"calls": 1, "iters": int(res.iters), "probes": int(res.ls_probes)}
+        return feasibility_solution(problem, res, stats, traces)
 
     def _probe(self, problem, bounds, trace, traces, stats):
         """Evaluate feasibility at each bound; batched when width allows."""
@@ -259,47 +294,76 @@ class Solver:
         return self._certify(problem, best, best_bound, stats, traces)
 
     def _not_found(self, problem, bound, res, stats, traces) -> Solution:
-        return Solution(
-            problem=problem.name,
-            status=int(res.status),
-            x=None,
-            objective=0.0,
-            bound=float(bound),
-            max_px=float(res.max_px),
-            min_cx=float(res.min_cx),
-            feasibility_calls=stats["calls"],
-            mwu_iters_total=stats["iters"],
-            ls_probes_total=stats["probes"],
-            last_result=res,
-            trace=traces,
-        )
+        return not_found_solution(problem, bound, res, stats, traces)
 
     def _certify(self, problem, best, best_bound, stats, traces) -> Solution:
-        """Rescale the raw MWU point into a certified solution (§2.2)."""
-        x = np.asarray(best.x)
-        if problem.sense == "max":
-            # Px <= 1+eps: dividing by the overshoot certifies Px <= 1
-            # at an objective loss of at most (1+eps).
-            x = x / max(float(best.max_px), 1.0)
-            objective = float(np.dot(np.asarray(problem.c), x))
-        elif problem.bound_mode == "objective_packing":
-            # covering slack is free objective: x/min(Cx) stays feasible
-            x = x / max(float(best.min_cx), 1.0)
-            objective = float(np.dot(np.asarray(problem.c), x))
-        else:
-            # densest-style: the bound itself is the certified objective
-            objective = float(best_bound)
-        return Solution(
-            problem=problem.name,
-            status=int(best.status),
-            x=x,
-            objective=objective,
-            bound=float(best_bound),
-            max_px=float(best.max_px),
-            min_cx=float(best.min_cx),
-            feasibility_calls=stats["calls"],
-            mwu_iters_total=stats["iters"],
-            ls_probes_total=stats["probes"],
-            last_result=best,
-            trace=traces,
-        )
+        return certify_solution(problem, best, best_bound, stats, traces)
+
+
+# -- Solution construction (shared with repro.lpserve's engine) -----------
+def feasibility_solution(problem, res, stats, traces=None) -> Solution:
+    """Solution for a single feasibility solve (``bound_mode="none"``)."""
+    ok = int(res.status) == Status.FEASIBLE
+    return Solution(
+        problem=problem.name,
+        status=int(res.status),
+        x=np.asarray(res.x) if ok else None,
+        objective=float("nan"),
+        bound=float("nan"),
+        max_px=float(res.max_px),
+        min_cx=float(res.min_cx),
+        feasibility_calls=stats["calls"],
+        mwu_iters_total=stats["iters"],
+        ls_probes_total=stats["probes"],
+        last_result=res,
+        trace=traces,
+    )
+
+
+def not_found_solution(problem, bound, res, stats, traces=None) -> Solution:
+    """Solution reporting that even the easy endpoint bound was infeasible."""
+    return Solution(
+        problem=problem.name,
+        status=int(res.status),
+        x=None,
+        objective=0.0,
+        bound=float(bound),
+        max_px=float(res.max_px),
+        min_cx=float(res.min_cx),
+        feasibility_calls=stats["calls"],
+        mwu_iters_total=stats["iters"],
+        ls_probes_total=stats["probes"],
+        last_result=res,
+        trace=traces,
+    )
+
+
+def certify_solution(problem, best, best_bound, stats, traces=None) -> Solution:
+    """Rescale the raw MWU point into a certified solution (§2.2)."""
+    x = np.asarray(best.x)
+    if problem.sense == "max":
+        # Px <= 1+eps: dividing by the overshoot certifies Px <= 1
+        # at an objective loss of at most (1+eps).
+        x = x / max(float(best.max_px), 1.0)
+        objective = float(np.dot(np.asarray(problem.c), x))
+    elif problem.bound_mode == "objective_packing":
+        # covering slack is free objective: x/min(Cx) stays feasible
+        x = x / max(float(best.min_cx), 1.0)
+        objective = float(np.dot(np.asarray(problem.c), x))
+    else:
+        # densest-style: the bound itself is the certified objective
+        objective = float(best_bound)
+    return Solution(
+        problem=problem.name,
+        status=int(best.status),
+        x=x,
+        objective=objective,
+        bound=float(best_bound),
+        max_px=float(best.max_px),
+        min_cx=float(best.min_cx),
+        feasibility_calls=stats["calls"],
+        mwu_iters_total=stats["iters"],
+        ls_probes_total=stats["probes"],
+        last_result=best,
+        trace=traces,
+    )

@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..sparsela.distributed import mtw_local, mx_local
 from ..sparsela.partition import Partition2D
+from ..utils.compat import shard_map
 from .mwu import Status, make_eta
 
 __all__ = ["dist_matching_solve", "DistMWUResult"]
@@ -251,7 +252,7 @@ def dist_matching_solve(part: Partition2D, n_vertices: int, bound: float,
             x, *rest = out
             return (x[None, None], *rest)
 
-        return jax.shard_map(
+        return shard_map(
             inner,
             mesh=mesh,
             in_specs=(P("data", "model", None),) * 4,
@@ -303,7 +304,7 @@ def make_pod_parallel_solver(mesh, G: int, block: int, n_vertices: int,
         return one(status), one(it), one(obj), one(max_px)
 
     def fn(bounds, u, v, msk):
-        return jax.shard_map(
+        return shard_map(
             inner,
             mesh=mesh,
             in_specs=(P("pod"), P("data", "model", None), P("data", "model", None),

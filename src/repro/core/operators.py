@@ -58,14 +58,19 @@ __all__ = [
 
 
 def register_op(cls):
-    """Register a LinOp dataclass as a pytree (array fields = leaves)."""
+    """Register a LinOp dataclass as a pytree (array fields = leaves).
+
+    Keyed registration: leaf paths render as attribute names
+    (``.P.u`` rather than ``[<flat index 0>]``), which
+    ``repro.api.stack_problems`` uses to name mismatched leaves.
+    """
     fields = dataclasses.fields(cls)
     leaf_names = [f.name for f in fields if not f.metadata.get("static", False)]
     static_names = [f.name for f in fields if f.metadata.get("static", False)]
 
-    def flatten(op):
+    def flatten_with_keys(op):
         return (
-            tuple(getattr(op, n) for n in leaf_names),
+            tuple((jax.tree_util.GetAttrKey(n), getattr(op, n)) for n in leaf_names),
             tuple(getattr(op, n) for n in static_names),
         )
 
@@ -74,7 +79,7 @@ def register_op(cls):
         kwargs.update(dict(zip(static_names, aux)))
         return cls(**kwargs)
 
-    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten)
     return cls
 
 

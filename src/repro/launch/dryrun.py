@@ -34,6 +34,7 @@ from ..models import Model
 from ..models.common import DP
 from ..train.optimizer import AdamWConfig, init_opt_state, opt_state_spec
 from ..train.step import TrainState, make_train_step
+from ..utils.compat import shard_map
 from ..utils.hlo import analyze_hlo
 from ..utils.roofline import roofline_terms, model_flops_estimate
 from .mesh import make_production_mesh, sharding_for
@@ -215,7 +216,7 @@ def run_mwu_cell(mesh_kind: str, scale: int = 22, edgefactor: int = 16):
                     x, *rest = out
                     return (x[None, None], *rest)
 
-                return jax.shard_map(
+                return shard_map(
                     inner, mesh=mesh,
                     in_specs=(P("data", "model", None),) * 4,
                     out_specs=(P("data", "model", None), P(), P(), P(), P(), P()),

@@ -12,20 +12,31 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh", "sharding_for"]
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer
+    jax; older releases default every axis to Auto anyway, so omitting
+    the kwarg is semantically identical there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(axis_type.Auto,) * len(axes)
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) single pod (256 chips) or (2,16,16) two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use (1,1) / (2,2) / (2,4) host-device meshes)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def sharding_for(mesh, spec_tree):

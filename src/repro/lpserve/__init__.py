@@ -1,0 +1,34 @@
+"""repro.lpserve — shape-bucketed continuous-batching serving for graph LPs.
+
+The serving subsystem on top of :mod:`repro.api`: heterogeneous
+:class:`~repro.api.Problem` requests are padded into shape buckets
+(:mod:`.bucketing`), batched onto fixed lane slots, and driven through
+``Solver.solve_batch`` one feasibility round at a time with continuous
+lane refill (:mod:`.engine`); per-bucket serving counters come from
+:mod:`.stats`. Typical use::
+
+    from repro.lpserve import LPEngine, LPServeConfig
+    from repro.graphs import build, erdos
+
+    engine = LPEngine(LPServeConfig(lanes=8))
+    rids = [engine.submit(build("match", erdos(50 * (i + 1), 140 * (i + 1), seed=i)))
+            for i in range(16)]
+    solutions = engine.run()          # {rid: Solution}
+    print(engine.stats()["batches"])  # far fewer than feasibility calls
+"""
+from .bucketing import BucketPolicy, BucketSpec, pad_problem, pad_problems, problem_dims
+from .engine import BoundSearch, LPEngine, LPServeConfig
+from .stats import BucketStats, aggregate
+
+__all__ = [
+    "BucketPolicy",
+    "BucketSpec",
+    "pad_problem",
+    "pad_problems",
+    "problem_dims",
+    "BoundSearch",
+    "LPEngine",
+    "LPServeConfig",
+    "BucketStats",
+    "aggregate",
+]

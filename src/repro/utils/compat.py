@@ -1,0 +1,27 @@
+"""jax version compatibility shims.
+
+The repo targets current jax but must keep running on the pinned
+container version; everything version-dependent is funnelled through
+here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes it as ``jax.shard_map`` with a ``check_vma``
+    flag; older releases only have ``jax.experimental.shard_map`` whose
+    equivalent flag is ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma)

@@ -1,0 +1,313 @@
+"""repro.lpserve: bucket policy, padding parity, continuous-batching engine.
+
+The load-bearing claims, in dependency order:
+
+1. the bucket policy rounds request dims onto a small ladder;
+2. *padding parity* — a Problem padded into a larger bucket certifies
+   the same objective (within the (1+eps) band) as the unpadded solve,
+   per problem family;
+3. padded problems stack (``stack_problems``) and mismatched ones raise
+   ValueErrors naming the offending field/leaf;
+4. the incremental :class:`BoundSearch` reproduces ``Solver.solve`` at
+   ``batch_width=1`` exactly;
+5. end-to-end: mixed-size requests through :class:`LPEngine` return
+   per-request Solutions matching sequential solves, with fewer batch
+   launches than requests (continuous batching actually batches).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import MWUOptions, Problem, Solver, stack_problems
+from repro.core import Dense
+from repro.graphs import Graph, build, erdos
+from repro.graphs.problems import generalized_matching_problem
+from repro.lpserve import (
+    BoundSearch,
+    BucketPolicy,
+    BucketSpec,
+    LPEngine,
+    LPServeConfig,
+    pad_problem,
+    pad_problems,
+    problem_dims,
+)
+
+EPS = 0.1
+OPTS = MWUOptions(eps=EPS, step_rule="newton", max_iter=20000)
+
+# three size tiers -> >= 3 distinct graph shapes in the engine tests
+SIZE_TIERS = [(40, 100), (60, 160), (80, 220)]
+
+
+def _tier_problems(family: str, count: int):
+    return [
+        build(family, erdos(*SIZE_TIERS[i % len(SIZE_TIERS)], seed=i))
+        for i in range(count)
+    ]
+
+
+def _value(prob: Problem, sol) -> float:
+    # densest-subgraph reports its optimum through the certified bound
+    return float(sol.bound if prob.name == "dense-sub" else sol.objective)
+
+
+# --------------------------------------------------------------- policy --
+def test_bucket_policy_geometric_ladder():
+    pol = BucketPolicy(vertex_floor=64, edge_floor=256, growth=2.0)
+    assert pol.bucket_for(10, 100) == BucketSpec(64, 256)
+    assert pol.bucket_for(64, 256) == BucketSpec(64, 256)  # exact rung
+    assert pol.bucket_for(65, 257) == BucketSpec(128, 512)
+    assert pol.bucket_for(300, 5000) == BucketSpec(512, 8192)
+
+
+def test_bucket_policy_explicit_ladder_wins():
+    pol = BucketPolicy(vertex_sizes=(100, 200), edge_sizes=(500,))
+    assert pol.bucket_for(150, 400) == BucketSpec(200, 500)
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        pol.bucket_for(201, 400)
+
+
+def test_bucket_policy_validation():
+    with pytest.raises(ValueError, match="growth"):
+        BucketPolicy(growth=1.0)
+    with pytest.raises(ValueError, match="sorted"):
+        BucketPolicy(vertex_sizes=(200, 100))
+
+
+@pytest.mark.parametrize("family", ["match", "vcover", "dom-set", "dense-sub"])
+def test_problem_dims_from_operators(family):
+    g = erdos(40, 100, seed=0)
+    prob = build(family, g)
+    assert problem_dims(prob) == (40, 100)
+    # still inferable once the pytree roundtrip drops the Graph handle
+    leaves, tree = jax.tree_util.tree_flatten(prob)
+    assert problem_dims(jax.tree_util.tree_unflatten(tree, leaves)) == (40, 100)
+
+
+# ------------------------------------------------------- padding parity --
+@pytest.mark.parametrize("family", ["match", "vcover", "dom-set", "dense-sub"])
+def test_padding_parity_certified_objective(family):
+    """A padded Problem must certify the same objective as the unpadded
+    one: padded edges/rows are masked out, so the feasible set over real
+    variables is unchanged and the identical probe sequence certifies
+    the identical bound."""
+    g = erdos(40, 100, seed=3)
+    prob = build(family, g)
+    padded = pad_problem(prob, BucketSpec(64, 256))
+    # the padded OPERATORS live on bucket dims; the source graph handle
+    # (and hence problem_dims, which prefers it) still reports the request
+    leaves, tree = jax.tree_util.tree_flatten(padded)
+    assert problem_dims(jax.tree_util.tree_unflatten(tree, leaves)) == (64, 256)
+    assert problem_dims(padded) == problem_dims(prob)
+    assert padded.lo == prob.lo and padded.hi == prob.hi
+
+    solver = Solver(OPTS, batch_width=1)
+    ref = solver.solve(prob)
+    sol = solver.solve(padded)
+    assert ref.found and sol.found
+    v_ref, v_pad = _value(prob, ref), _value(prob, sol)
+    assert abs(v_pad - v_ref) <= EPS * max(abs(v_ref), 1.0)
+    # padded coordinates never receive a gradient step: they stay frozen
+    # at the (uniform) MWU init value instead of tracking the solve
+    assert np.ptp(np.asarray(sol.x)[prob.n_vars:]) == 0.0
+
+
+def test_padding_parity_feasibility_status():
+    """Per-probe parity: the padded LP answers every bound the same way."""
+    g = erdos(50, 120, seed=1)
+    prob = build("match", g)
+    padded = pad_problem(prob, BucketSpec(64, 256))
+    solver = Solver(OPTS)
+    for b in np.geomspace(float(prob.lo), float(prob.hi), 3):
+        r0 = solver.feasible(prob, float(b))
+        r1 = solver.feasible(padded, float(b))
+        assert int(r0.status) == int(r1.status), f"status flipped at bound {b}"
+
+
+def test_pad_problem_rejects_too_small_bucket_and_callable():
+    prob = build("match", erdos(40, 100, seed=0))
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_problem(prob, BucketSpec(64, 64))
+    bad = dataclasses.replace(prob, bound_mode="callable", make_ops=lambda b: None)
+    with pytest.raises(ValueError, match="callable"):
+        pad_problem(bad, BucketSpec(64, 256))
+
+
+def test_feasibility_only_problem_pads():
+    """gen-match exercises the VStack + box-Coo padding rules."""
+    g = Graph.from_edges(6, np.array([[0, i] for i in range(1, 6)]), "star6")
+    lb = np.zeros(6)
+    lb[0] = 2.0
+    prob = generalized_matching_problem(g, lb, np.full(6, 3.0))
+    padded = pad_problem(prob, BucketSpec(16, 16))
+    sol = Solver(OPTS).solve(padded)
+    assert sol.feasible
+    assert np.isnan(sol.objective)
+    assert np.ptp(np.asarray(sol.x)[prob.n_vars:]) == 0.0  # frozen at init
+
+
+# ------------------------------------------------------------- stacking --
+def test_pad_problems_stack_and_batch():
+    """Mixed-size problems padded into one bucket run as ONE instance
+    batch, and every lane agrees with its sequential probe."""
+    probs = _tier_problems("match", 3)
+    padded, bucket = pad_problems(probs)
+    assert bucket == BucketSpec(128, 256)
+    stacked = stack_problems(padded)  # would raise without padding
+    bounds = [float(np.sqrt(float(p.lo) * float(p.hi))) for p in probs]
+    solver = Solver(OPTS)
+    batch = solver.solve_batch(stacked, jnp.asarray(bounds), batched_problem=True)
+    assert batch.status.shape == (3,)
+    for j, (p, b) in enumerate(zip(probs, bounds)):
+        res = solver.feasible(p, b)
+        assert int(res.status) == int(np.asarray(batch.status)[j])
+
+
+def test_stack_problems_names_mismatched_static_field():
+    probs = _tier_problems("match", 2)  # different sizes -> different n_vars
+    with pytest.raises(ValueError, match=r"static field 'n_vars'"):
+        stack_problems(probs)
+
+
+def test_stack_problems_names_mismatched_structure():
+    pa = Problem(name="x", kind="packing", sense="max",
+                 bound_mode="objective_covering", P=Dense(jnp.ones((2, 3))),
+                 c=jnp.ones((3,)))
+    pb = dataclasses.replace(pa, C=Dense(jnp.ones((2, 3))))
+    with pytest.raises(ValueError, match="pytree structure"):
+        stack_problems([pa, pb])
+
+
+def test_stack_problems_names_mismatched_leaf_shape():
+    pa = Problem(name="x", kind="packing", sense="max",
+                 bound_mode="objective_covering", P=Dense(jnp.ones((2, 3))),
+                 c=jnp.ones((3,)))
+    pb = dataclasses.replace(pa, P=Dense(jnp.ones((2, 4))), c=jnp.ones((4,)))
+    # the keyed pytree registration makes the message name the leaf path
+    with pytest.raises(ValueError, match=r"\.P\.mat.*pad_problems"):
+        stack_problems([pa, pb])
+    with pytest.raises(ValueError, match="at least one"):
+        stack_problems([])
+
+
+# --------------------------------------------------------- bound search --
+def test_bound_search_replays_sequential_solver():
+    """Driven by the same feasibility oracle, the incremental search
+    must reproduce Solver.solve at batch_width=1 *exactly* — identical
+    probe sequence, identical certified solution."""
+    for family in ("match", "vcover"):
+        prob = build(family, erdos(50, 120, seed=2))
+        seq = Solver(OPTS, batch_width=1)
+        ref = seq.solve(prob)
+        bs = BoundSearch(prob, rel_tol=OPTS.eps / 2, max_calls=64)
+        while not bs.done:
+            b = bs.next_bound()
+            bs.update(b, seq.feasible(prob, b))
+        assert bs.solution.found == ref.found
+        assert bs.solution.feasibility_calls == ref.feasibility_calls
+        assert bs.solution.objective == pytest.approx(ref.objective, rel=1e-12)
+
+
+def test_bound_search_not_found():
+    prob = build("match", erdos(40, 100, seed=0))
+    # a matching LP on 40 vertices can never reach objective 40
+    bad = dataclasses.replace(prob, lo=40.0, hi=80.0)
+    seq = Solver(OPTS, batch_width=1)
+    bs = BoundSearch(bad, rel_tol=OPTS.eps / 2, max_calls=64)
+    while not bs.done:
+        b = bs.next_bound()
+        bs.update(b, seq.feasible(bad, b))
+    assert not bs.solution.found
+    assert bs.solution.objective == 0.0
+
+
+# --------------------------------------------------------------- engine --
+def test_engine_end_to_end_mixed_sizes():
+    """The acceptance test: N requests spanning >= 3 distinct graph
+    sizes, solved through the engine, match sequential Solver.solve
+    objectives — with fewer batch launches than requests."""
+    probs = _tier_problems("match", 12)
+    assert len({problem_dims(p) for p in probs}) >= 3
+    engine = LPEngine(LPServeConfig(opts=OPTS, lanes=8))
+    sols = engine.solve_many(probs)
+
+    seq = Solver(OPTS, batch_width=1)
+    for i, (p, sol) in enumerate(zip(probs, sols)):
+        ref = seq.solve(p)
+        assert sol.feasible, f"request {i} not feasible"
+        assert abs(sol.objective - ref.objective) <= 3.0 * EPS * max(ref.objective, 1.0), (
+            f"request {i}: engine {sol.objective} vs sequential {ref.objective}"
+        )
+        assert np.asarray(sol.x).shape == (p.n_vars,)  # unpadded
+
+    st = engine.stats()
+    assert st["requests"] == st["completed"] == len(probs)
+    assert st["batches"] < len(probs), "continuous batching never batched"
+    assert st["feasibility_calls"] >= len(probs)
+    assert 0.0 < st["lane_occupancy"] <= 1.0
+    assert st["compile_cache_hits"] >= 1  # bucket shapes were reused
+    assert st["compiles"] <= len({(p.name, problem_dims(p)) for p in probs})
+
+
+def test_engine_mixed_families_and_stats_shape():
+    probs = [
+        build("match", erdos(40, 100, seed=0)),
+        build("vcover", erdos(40, 100, seed=1)),
+        build("match", erdos(60, 160, seed=2)),
+        build("vcover", erdos(60, 160, seed=3)),
+    ]
+    engine = LPEngine(LPServeConfig(opts=OPTS, lanes=4))
+    rids = [engine.submit(p) for p in probs]
+    engine.run()
+    sols = [engine.result(r) for r in rids]
+    assert all(s is not None and s.feasible for s in sols)
+
+    st = engine.stats()
+    assert st["not_found"] == 0
+    assert set(st["buckets"]) >= {"match/V64xE256", "vcover/V64xE256"}
+    for b in st["buckets"].values():
+        assert b["completed"] == b["requests"]
+        assert 0.0 <= b["padding_waste"] < 1.0
+    assert np.isfinite(st["latency_p50_s"]) and np.isfinite(st["latency_p99_s"])
+    assert st["latency_p50_s"] <= st["latency_p99_s"] + 1e-12
+
+
+def test_engine_not_found_request():
+    prob = build("match", erdos(40, 100, seed=0))
+    bad = dataclasses.replace(prob, lo=40.0, hi=80.0)
+    engine = LPEngine(LPServeConfig(opts=OPTS, lanes=2))
+    sols = engine.solve_many([bad])
+    assert not sols[0].found
+    assert sols[0].objective == 0.0
+    assert engine.stats()["not_found"] == 1
+
+
+def test_engine_feasibility_only_request():
+    g = Graph.from_edges(6, np.array([[0, i] for i in range(1, 6)]), "star6")
+    lb = np.zeros(6)
+    lb[0] = 2.0
+    prob = generalized_matching_problem(g, lb, np.full(6, 3.0))
+    engine = LPEngine(LPServeConfig(
+        opts=OPTS, lanes=2, policy=BucketPolicy(vertex_floor=8, edge_floor=8)))
+    sols = engine.solve_many([prob])
+    assert sols[0].feasible
+    assert np.isnan(sols[0].objective)
+    assert sols[0].feasibility_calls == 1  # bound_mode="none": single probe
+
+
+def test_engine_unpadded_lanes_mode():
+    """pad_lanes=False launches exactly the active lane count."""
+    probs = [build("match", erdos(40, 100, seed=s)) for s in (0, 1)]
+    engine = LPEngine(LPServeConfig(opts=OPTS, lanes=4, pad_lanes=False))
+    sols = engine.solve_many(probs)
+    assert all(s.feasible for s in sols)
+    assert engine.stats()["lane_occupancy"] == 1.0
+
+
+def test_engine_rejects_bad_config():
+    with pytest.raises(ValueError, match="lanes"):
+        LPServeConfig(lanes=0)
