@@ -7,11 +7,17 @@
     explicit generic-sparse representation (our Coo = the PETSc role).
     Reported as per-component speedup, like Fig. 5c / Table 4's
     shared-memory half.
+(c) Kernel dispatch: the same hot ops and an end-to-end solve with the
+    Pallas kernel pack forced on (``kernel_backend="pallas"``, interpret
+    mode off-TPU) vs the default XLA path, proving the dispatch layer is
+    active and measuring what it costs/saves on this platform.
 
-Emits CSV: problem,component,implicit_us,explicit_us,speedup.
+Emits CSV: problem,component,implicit_us,explicit_us,speedup
+      and: component,pallas_us,xla_us,xla_over_pallas
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -21,8 +27,9 @@ import numpy as np
 from repro.core import Coo, Incidence, MWUOptions
 from repro.core.mwu import make_eta
 from repro.core.smoothing import smax_and_weights
-from repro.core.stepsize import binary_search_step
+from repro.core.stepsize import binary_search_step, make_probe_fn
 from repro.graphs import rgg
+from repro.kernels import dispatch as kd
 
 from .common import Csv
 
@@ -107,4 +114,38 @@ def run(scale=14):
     csv.add("match", "end2end_solve", f"{t_imp*1e6:.0f}", f"{t_exp*1e6:.0f}",
             f"{t_exp/max(t_imp,1e-9):.2f}")
     csv.dump()
+
+    # (c) kernel dispatch: pallas pack vs XLA on the same mid-solve state.
+    # Dispatch decisions are trace-time, so each jit wrapper is traced
+    # (compiled) under its policy; the timed calls then hit that cache.
+    pallas = kd.resolve("pallas")
+
+    def _time_under(policy, fn, *a):
+        f = jax.jit(fn)
+        kd.reset_stats()
+        with kd.use_policy(policy):
+            jax.block_until_ready(f(*a))
+        chosen = kd.stats()
+        return _time(f, *a), chosen
+
+    csv2 = Csv("component,pallas_us,xla_us,xla_over_pallas")
+    alpha0 = jnp.asarray(0.5)
+    for name, fn, a in [
+        ("rmatvec_dispatch", imp.rmatvec, (wv,)),
+        ("smax_weights_dispatch", lambda v: smax_and_weights(v, eta)[1], (y,)),
+        ("probe_dispatch", lambda aa: make_probe_fn(y, z, dy, dz, eta)(aa).f, (alpha0,)),
+    ]:
+        (t_p, chosen), (t_x, _) = _time_under(pallas, fn, *a), _time_under(kd.XLA_POLICY, fn, *a)
+        on = "+".join(op for op, d in chosen.items() if d["pallas"] > 0) or "FALLBACK"
+        csv2.add(f"{name}[{on}]", f"{t_p:.1f}", f"{t_x:.1f}", f"{t_x/max(t_p,1e-9):.2f}")
+
+    opts_p = dataclasses.replace(opts, kernel_backend="pallas")
+    r_p = solve(imp, C1, opts_p)  # compile under the pallas policy
+    t0 = time.perf_counter()
+    r_p = jax.block_until_ready(solve(imp, C1, opts_p))
+    t_p = time.perf_counter() - t0
+    assert int(r_p.status) == int(r_imp.status)
+    csv2.add("end2end_solve_dispatch", f"{t_p*1e6:.0f}", f"{t_imp*1e6:.0f}",
+             f"{t_imp/max(t_p,1e-9):.2f}")
+    csv2.dump()
     return csv

@@ -1,0 +1,178 @@
+"""Pallas kernel pack vs plain XLA, per op and per end-to-end solve.
+
+Times each dispatchable hot op (incidence gather, softmax weights,
+line-search probe, fused axpy) under ``impl="pallas"`` and ``impl="xla"``
+at one or two sizes, then solves whole problems with
+``MWUOptions(kernel_backend=...)`` both ways and checks via
+``dispatch.stats()`` that the pallas path was genuinely active.
+
+On CPU the pallas timings run the kernels through the Pallas interpreter
+(pure XLA lowering of the tiled kernel body) — they measure dispatch
+correctness and tiling overhead, not Mosaic speed; on a real TPU the
+same records become the fused-vs-unfused comparison. Records are
+returned as a JSON-ready dict; ``benchmarks/run.py kernels`` writes them
+to BENCH_kernels.json.
+
+Emits CSV: op,n,dtype,pallas_us,xla_us,xla_over_pallas
+      and: family,backend,solve_s,feasible,ops_on_pallas
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch as kd
+from repro.kernels.axpy_reduce.ops import axpy_reduce
+from repro.kernels.incidence_gather.ops import incidence_gather
+from repro.kernels.linesearch_probe.ops import linesearch_probe
+from repro.kernels.softmax_weights.ops import softmax_weights
+
+from .common import Csv
+
+FAMILIES = ["match", "vcover", "dom-set", "dense-sub"]
+
+
+def _time_us(fn, *args, repeats=10):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def _op_bytes(op: str, n: int, itemsize: int) -> int:
+    """Streaming-bytes model for the roofline view (reads + writes)."""
+    if op == "gather":
+        # u, v int32 reads + random w reads (~1 line each) + E-sized write
+        return n * (4 + 4 + 2 * itemsize)
+    if op == "softmax":
+        return n * 2 * itemsize  # read v, write weights
+    if op == "probe":
+        return n * 2 * itemsize  # read y, dy; scalar outputs
+    if op == "axpy":
+        return n * 3 * itemsize  # read y, dy; write out
+    raise ValueError(op)
+
+
+def per_op_records(sizes, dtype=jnp.float64):
+    rng = np.random.default_rng(0)
+    recs = []
+    itemsize = jnp.dtype(dtype).itemsize
+    for n in sizes:
+        y = jnp.asarray(rng.random(n), dtype)
+        dy = jnp.asarray(rng.random(n) * 1e-3, dtype)
+        u = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+        v = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+        eta = jnp.asarray(150.0, dtype)
+        alpha = jnp.asarray(2.5, dtype)
+        calls = {
+            "gather": lambda impl: incidence_gather(u, v, y, impl=impl),
+            "softmax": lambda impl: softmax_weights(y, eta, sign=1.0, impl=impl),
+            "probe": lambda impl: linesearch_probe(y, dy, alpha, eta, sign=-1.0, impl=impl),
+            "axpy": lambda impl: axpy_reduce(y, dy, alpha, impl=impl),
+        }
+        for op, call in calls.items():
+            t_p = _time_us(call, "pallas")
+            t_x = _time_us(call, "xla")
+            b = _op_bytes(op, n, itemsize)
+            recs.append(
+                {
+                    "op": op,
+                    "n": n,
+                    "dtype": jnp.dtype(dtype).name,
+                    "pallas_us": round(t_p, 2),
+                    "xla_us": round(t_x, 2),
+                    "xla_over_pallas": round(t_x / max(t_p, 1e-9), 3),
+                    "bytes": b,
+                    "pallas_gbps": round(b / max(t_p, 1e-9) / 1e3, 3),
+                    "xla_gbps": round(b / max(t_x, 1e-9) / 1e3, 3),
+                }
+            )
+    return recs
+
+
+def end_to_end_records(families, scale=5):
+    from repro.api import MWUOptions, Solver
+    from repro.graphs import build, grid2d
+
+    g = grid2d(scale)
+    recs = []
+    for family in families:
+        prob = build(family, g)
+        for backend in ["xla", "pallas"]:
+            opts = MWUOptions(
+                eps=0.15, step_rule="newton", max_iter=20000, kernel_backend=backend
+            )
+            solver = Solver(opts, batch_width=4)
+            # dispatch decisions happen at trace time: read the stats off
+            # the compiling call, then time the warm (cached) one
+            kd.reset_stats()
+            sol = solver.solve(prob)
+            s = kd.stats()
+            t0 = time.perf_counter()
+            sol = solver.solve(prob)
+            dt = time.perf_counter() - t0
+            on_pallas = sorted(op for op, d in s.items() if d["pallas"] > 0)
+            recs.append(
+                {
+                    "family": family,
+                    "backend": backend,
+                    "graph": g.name,
+                    "solve_s": round(dt, 4),
+                    "feasible": bool(sol.feasible),
+                    "objective": float(sol.objective),
+                    "bound": float(sol.bound),
+                    "ops_on_pallas": on_pallas,
+                    "stats": s,
+                }
+            )
+    return recs
+
+
+def dispatch_active(e2e_recs) -> bool:
+    """Every pallas-backend solve ran softmax+probe+axpy (and gather where
+    the family has a gather-shaped operator) on the kernel path."""
+    ok = True
+    for r in e2e_recs:
+        need = {"softmax", "probe", "axpy"}
+        if r["backend"] == "pallas" and r["family"] != "dom-set":
+            need.add("gather")
+        if r["backend"] == "pallas" and not need.issubset(set(r["ops_on_pallas"])):
+            ok = False
+    return ok
+
+
+def run(quick=False):
+    sizes = [1 << 14] if quick else [1 << 16, 1 << 20]
+    families = ["match", "dense-sub"] if quick else FAMILIES
+    policy = kd.resolve("pallas")
+
+    per_op = per_op_records(sizes)
+    csv = Csv("op,n,dtype,pallas_us,xla_us,xla_over_pallas")
+    for r in per_op:
+        csv.add(r["op"], r["n"], r["dtype"], r["pallas_us"], r["xla_us"], r["xla_over_pallas"])
+    csv.dump()
+
+    e2e = end_to_end_records(families, scale=4 if quick else 6)
+    csv2 = Csv("family,backend,solve_s,feasible,ops_on_pallas")
+    for r in e2e:
+        csv2.add(
+            r["family"], r["backend"], r["solve_s"], r["feasible"],
+            "+".join(r["ops_on_pallas"]) or "-",
+        )
+    csv2.dump()
+
+    active = dispatch_active(e2e)
+    print(f"dispatch_active={active} (pallas policy: interpret={policy.interpret})")
+    return {
+        "platform": jax.default_backend(),
+        "interpret": policy.interpret,
+        "quick": bool(quick),
+        "dispatch_active": active,
+        "per_op": per_op,
+        "end_to_end": e2e,
+    }

@@ -5,6 +5,11 @@ MODEL_FLOPS ratio and the step-time lower bound.
 Emits CSV:
 arch,shape,mesh,step,compute_s,memory_s,collective_s,bottleneck,
 model_flops_ratio,mfu_upper_bound
+
+:func:`run_kernels` adds the kernel-pack view: every dispatchable MWU op
+is pure streaming (O(1) flops/byte), so its roofline is the memory line
+— achieved GB/s from the bytes-moved model under the pallas and XLA
+paths, normalized to the best bandwidth any op achieved on this host.
 """
 from __future__ import annotations
 
@@ -43,6 +48,29 @@ def run(tag_filter=""):
             f"{ro['collective_s']:.3e}", ro["bottleneck"],
             f"{ro.get('model_flops_ratio', float('nan')):.3f}",
             f"{ro.get('mfu_upper_bound', float('nan')):.4f}",
+        )
+    csv.dump()
+    return csv
+
+
+def run_kernels(records=None, quick=True):
+    """Memory-roofline view of the dispatchable MWU ops (pallas vs XLA).
+
+    ``records`` takes the ``per_op`` list from ``bench_kernels`` so
+    ``run.py kernels`` prints both views off one measurement pass; when
+    absent the ops are (re)timed here.
+    """
+    if records is None:
+        from . import bench_kernels
+
+        records = bench_kernels.per_op_records([1 << 14] if quick else [1 << 16, 1 << 20])
+    best = max((max(r["pallas_gbps"], r["xla_gbps"]) for r in records), default=1.0)
+    csv = Csv("op,n,dtype,bytes,pallas_gbps,xla_gbps,pallas_frac_of_best")
+    for r in records:
+        csv.add(
+            r["op"], r["n"], r["dtype"], r["bytes"],
+            f"{r['pallas_gbps']:.3f}", f"{r['xla_gbps']:.3f}",
+            f"{r['pallas_gbps'] / max(best, 1e-9):.3f}",
         )
     csv.dump()
     return csv

@@ -7,14 +7,23 @@
   fig4    bench_scaling      distributed per-device work/comm vs grid
   roofline bench_roofline    dry-run roofline table (§Roofline source)
   serving bench_serving      lpserve continuous batching vs sequential
+  kernels bench_kernels      pallas kernel pack vs XLA, per op + solve
+                             (writes BENCH_kernels.json at the repo root)
 
-``python -m benchmarks.run [section ...]`` — default: all. The solver
+``python -m benchmarks.run [section ...] [--quick]`` — default: all.
+``--quick`` shrinks the kernels section to CI-smoke sizes. The solver
 benches enable x64 (paper runs in f64 on CPU; DESIGN.md §7).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
+
+ALL_SECTIONS = [
+    "table2", "table3", "fig3", "fig5", "fig4", "roofline", "serving", "kernels",
+]
 
 
 def main() -> None:
@@ -22,7 +31,9 @@ def main() -> None:
 
     jax.config.update("jax_enable_x64", True)
 
-    sections = sys.argv[1:] or ["table2", "table3", "fig3", "fig5", "fig4", "roofline", "serving"]
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    sections = [a for a in argv if not a.startswith("--")] or ALL_SECTIONS
     t00 = time.perf_counter()
     for s in sections:
         print(f"\n===== {s} =====", flush=True)
@@ -55,6 +66,14 @@ def main() -> None:
             from . import bench_serving
 
             bench_serving.run()
+        elif s == "kernels":
+            from . import bench_kernels, bench_roofline
+
+            records = bench_kernels.run(quick=quick)
+            bench_roofline.run_kernels(records=records["per_op"])
+            out = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+            out.write_text(json.dumps(records, indent=2) + "\n")
+            print(f"wrote {out}", flush=True)
         else:
             print(f"unknown section {s}")
         print(f"[{s}: {time.perf_counter()-t0:.1f}s]", flush=True)

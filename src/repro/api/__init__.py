@@ -18,6 +18,16 @@ The legacy entry points (``core.solve`` / ``solve_traced``, the
 ``core.feasibility`` binary-search drivers, ``ProblemLP.solve``) remain
 as thin shims over this module. For serving mixed-size request traffic
 through one compiled shape per bucket, see :mod:`repro.lpserve`.
+
+``MWUOptions.kernel_backend`` selects the compute path for the MWU
+iteration's hot ops (incidence gather, softmax weights, line-search
+probe, fused axpy): ``"auto"`` (default) uses the Pallas kernel pack on
+TPU and plain XLA elsewhere, ``"pallas"`` forces the kernels (interpret
+mode off-TPU, for CI parity), ``"xla"`` forces the legacy jnp path.
+The ``REPRO_KERNEL_BACKEND`` environment variable overrides ``"auto"``.
+Resolution happens host-side per solve, so switching devices or env
+between calls never hits a stale jit cache; see
+:mod:`repro.kernels.dispatch`.
 """
 from ..core.mwu import MWUOptions, MWUResult, Status
 from .problem import BOUND_MODES, SENSES, Problem

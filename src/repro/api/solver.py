@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.mwu import MWUOptions, MWUResult, Status, _run, solve, solve_traced
+from ..kernels import dispatch as _kd
 from .problem import Problem
 
 __all__ = [
@@ -73,13 +74,19 @@ class Solution:
         return self.status == Status.FEASIBLE and self.found
 
 
-@partial(jax.jit, static_argnames=("opts", "problem_axis"))
-def _feasibility_batch(problem: Problem, bounds, opts: MWUOptions, problem_axis):
-    """vmap the MWU while_loop across bounds (and optionally instances)."""
+@partial(jax.jit, static_argnames=("opts", "problem_axis", "kernels"))
+def _feasibility_batch(problem: Problem, bounds, opts: MWUOptions, problem_axis, kernels=None):
+    """vmap the MWU while_loop across bounds (and optionally instances).
+
+    ``kernels`` is the host-resolved KernelPolicy (static): pallas entry
+    points are ``custom_vmap``-wrapped, so batched lanes transparently
+    take the vmap-composable XLA rule while the policy still keys the
+    jit cache consistently with the unbatched path.
+    """
 
     def one(prob, b):
         P, C, pm, cm = prob.instantiate(b)
-        return _run(P, C, opts, pm, cm)
+        return _run(P, C, opts, pm, cm, kernels=kernels)
 
     return jax.vmap(one, in_axes=(problem_axis, 0))(problem, bounds)
 
@@ -190,7 +197,10 @@ class Solver:
         ``len(bounds)``.
         """
         bounds = jnp.atleast_1d(jnp.asarray(bounds))
-        return _feasibility_batch(problem, bounds, self.opts, 0 if batched_problem else None)
+        kernels = _kd.resolve(self.opts.kernel_backend)  # host-side, pre-jit
+        return _feasibility_batch(
+            problem, bounds, self.opts, 0 if batched_problem else None, kernels=kernels
+        )
 
     # -- the unified optimization driver ------------------------------
     def solve(self, problem: Problem, *, trace: bool = False) -> Solution:

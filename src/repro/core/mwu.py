@@ -15,6 +15,15 @@ of the paper's §5.1.3 loop fusion) with an optional ``io_callback``
 trace hook that streams per-iteration diagnostics (max violation, alpha,
 probes) to the host for the Figure-3 convergence studies.
 
+``MWUOptions.kernel_backend`` selects the vector-op implementation for
+the loop body: under ``"pallas"`` (or ``"auto"`` on TPU) the incidence
+gathers, the eta-softmax gradient weights, every line-search probe, and
+the x/y/z update triple run through the fused Pallas kernel pack via
+``repro.kernels.dispatch`` — the entry points resolve the backend
+host-side (outside jit) into a :class:`~repro.kernels.dispatch.KernelPolicy`
+static argument, so the jit cache can never serve a stale device choice,
+and CPU runs exercise the identical kernel code in interpret mode.
+
 * ``solve``        — the production path (trace hook off).
 * ``solve_traced`` — same compiled loop with the trace hook on; kept as
                      a thin shim for legacy callers. The canonical
@@ -37,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import dispatch as _kd
 from .operators import LinOp
 from .smoothing import smax_and_weights, smin_and_weights
 from .stepsize import STEP_RULES, StepSizeResult
@@ -65,6 +75,10 @@ class MWUOptions:
     pure: bool | None = None  # None = auto-detect single-row objective embedding
     # packing slack accepted at termination; the theory gives (1+eps).
     check_packing: bool = True
+    # vector-op backend for the loop body: "auto" (pallas on TPU, xla
+    # elsewhere; REPRO_KERNEL_BACKEND env var overrides), "pallas"
+    # (fused kernel pack, interpret mode off-TPU), or "xla".
+    kernel_backend: str = "auto"
 
     def resolve_pure(self, P: LinOp, C: LinOp) -> bool:
         if self.pure is not None:
@@ -154,12 +168,19 @@ def _iteration(P: LinOp, C: LinOp, eta, scale, step_fn, ls_eps, p_mask, c_mask, 
     ss: StepSizeResult = step_fn(y, z, dy, dz, eta, p_mask, c_mask, ls_eps, carry.alpha_prev)
     infeasible_alpha = ss.alpha < 1  # line 12
 
-    # apply (lines 14-15); never move on a terminal iteration
+    # apply (lines 14-15); never move on a terminal iteration. Under a
+    # pallas policy the update triple runs as fused axpy+reduce sweeps
+    # (the min/max come free; XLA DCEs them on the fallback path).
     bad = infeasible_dir | infeasible_alpha
     aa = jnp.where(bad, 0.0, ss.alpha).astype(dt)
-    x2 = x + aa * d
-    y2 = y + aa * dy
-    z2 = z + aa * dz
+    if _kd.choose("axpy", x) == "pallas":
+        x2, _, _ = _kd.axpy_pallas(x, d, aa)
+        y2, _, _ = _kd.axpy_pallas(y, dy, aa)
+        z2, _, _ = _kd.axpy_pallas(z, dz, aa)
+    else:
+        x2 = x + aa * d
+        y2 = y + aa * dy
+        z2 = z + aa * dz
 
     status = jnp.where(
         infeasible_dir | infeasible_alpha,
@@ -222,7 +243,7 @@ def _trace_emit(it, viol, alpha, probes):
         _TRACE.rows.append((int(it), float(viol), float(alpha), int(probes)))
 
 
-def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False):
+def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False, kernels=None):
     """The unified driver: one ``lax.while_loop`` for jit, vmap and tracing.
 
     Masks are None-or-array at the python level (callers that need a
@@ -231,7 +252,18 @@ def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False):
     probes) through an unordered ``io_callback`` into ``_TRACE``; the
     hook must stay off under ``jax.vmap`` (io_callback has no batching
     rule by default), which ``repro.api`` enforces.
+
+    ``kernels`` is the resolved :class:`~repro.kernels.dispatch.KernelPolicy`
+    installed for the duration of this trace; the public entry points
+    resolve it host-side and pass it through as a jit static argument.
+    Direct callers that omit it get a trace-time resolution fallback.
     """
+    policy = kernels if kernels is not None else _kd.resolve(opts.kernel_backend)
+    with _kd.use_policy(policy):
+        return _run_inner(P, C, opts, pm, cm, trace)
+
+
+def _run_inner(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool):
     m = P.shape[0] + C.shape[0]
     dt = jnp.promote_types(P.colmax().dtype, C.colmax().dtype)
     dt = dt if jnp.issubdtype(dt, jnp.floating) else jnp.float32
@@ -280,11 +312,11 @@ def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False):
     return _finalize(opts, carry, pm, cm)
 
 
-@partial(jax.jit, static_argnames=("opts", "has_p_mask", "has_c_mask", "trace"))
-def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask, trace=False):
+@partial(jax.jit, static_argnames=("opts", "has_p_mask", "has_c_mask", "trace", "kernels"))
+def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask, trace=False, kernels=None):
     pm = p_mask if has_p_mask else None
     cm = c_mask if has_c_mask else None
-    return _run(P, C, opts, pm, cm, trace=trace)
+    return _run(P, C, opts, pm, cm, trace=trace, kernels=kernels)
 
 
 def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None) -> MWUResult:
@@ -293,7 +325,11 @@ def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_ma
     hp, hc = p_mask is not None, c_mask is not None
     pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
     cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
-    return _solve_impl(P, C, opts, pm, cmk, hp, hc)
+    # Resolve the kernel backend OUTSIDE the jit: the concrete policy is
+    # part of the cache key, so a device switch re-resolves instead of
+    # serving a stale trace-time jax.default_backend() read.
+    kernels = _kd.resolve(opts.kernel_backend)
+    return _solve_impl(P, C, opts, pm, cmk, hp, hc, kernels=kernels)
 
 
 def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None):
@@ -309,9 +345,10 @@ def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=Non
     hp, hc = p_mask is not None, c_mask is not None
     pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
     cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
+    kernels = _kd.resolve(opts.kernel_backend)
     _TRACE.rows = []
     try:
-        res = _solve_impl(P, C, opts, pm, cmk, hp, hc, trace=True)
+        res = _solve_impl(P, C, opts, pm, cmk, hp, hc, trace=True, kernels=kernels)
         jax.block_until_ready(res.x)
         jax.effects_barrier()
         rows = sorted(_TRACE.rows)

@@ -16,9 +16,16 @@ accumulations (scatter-add over endpoints); products with the transpose
 are gathers (``w[u] + w[v]``), which is the direction the paper fuses.
 
 TPU adaptation (DESIGN.md §3): the scatter direction lowers to XLA
-scatter-add over a sorted edge list; the gather direction is a fused
-Pallas kernel (`repro.kernels.incidence_gather`) with this module's jnp
-implementation as its oracle.
+scatter-add over a sorted edge list; the gather direction dispatches at
+trace time through ``repro.kernels.dispatch`` — when the active
+:class:`~repro.kernels.dispatch.KernelPolicy` selects the pallas
+backend (``MWUOptions.kernel_backend``, resolved host-side by the solve
+entry points), ``Incidence.rmatvec`` and ``VertexEdgePair.rmatvec`` run
+the fused ``incidence_gather`` kernel (interpret mode on CPU CI, Mosaic
+on TPU); under the default XLA policy they run the plain jnp gather
+below, which doubles as the kernel's oracle. ``Transposed`` wrappers
+ride along for free: vertex-cover's ``M^T`` gather is
+``Transposed(Incidence).matvec`` = ``Incidence.rmatvec``.
 
 Operators are registered pytrees, so they can be passed straight through
 ``jax.jit`` / ``lax.while_loop`` carries; shape metadata is static.
@@ -40,6 +47,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels import dispatch as _kd
 
 __all__ = [
     "LinOp",
@@ -217,8 +226,12 @@ class Incidence(LinOp):
         return out.at[self.u].add(xw).at[self.v].add(xw)
 
     def rmatvec(self, y):
-        # g_e = y_u + y_v  (gather direction — Pallas hot spot)
-        return (y[self.u] + y[self.v]) * self._w(y.dtype)
+        # g_e = y_u + y_v  (gather direction — the Pallas hot spot)
+        if _kd.choose("gather", y) == "pallas":
+            g = _kd.gather_pallas(self.u, self.v, y)
+        else:
+            g = y[self.u] + y[self.v]
+        return g * self._w(y.dtype)
 
     def colmax(self, row_scale=None):
         w = self._w(jnp.float32 if row_scale is None else row_scale.dtype)
@@ -305,7 +318,14 @@ class VertexEdgePair(LinOp):
         return out.at[self.u].add(zu).at[self.v].add(zv)
 
     def rmatvec(self, y):
-        g = jnp.stack([y[self.u], y[self.v]], axis=-1)
+        if _kd.choose("gather", y) == "pallas":
+            # Interleaved pair gather through the incidence kernel: with
+            # idx = [u0, v0, u1, v1, ...], gather(idx, idx, y) = 2*y[idx]
+            # and the halving is exact in binary floating point.
+            idx = jnp.stack([self.u, self.v], axis=-1).reshape(-1)
+            g = (0.5 * _kd.gather_pallas(idx, idx, y)).reshape(-1, 2)
+        else:
+            g = jnp.stack([y[self.u], y[self.v]], axis=-1)
         if self.edge_mask is not None:
             g = jnp.where(self.edge_mask[:, None], g, 0)
         return g.reshape(-1)

@@ -15,11 +15,19 @@ eta = 10 log(m)/epsilon is ~100 log m, far beyond f32 (and f64) exp range.
 For a masked variant (used when covering constraints are conceptually
 dropped, Alg. 1 line 11) a boolean mask selects the active entries; masked
 entries contribute -inf to the logsumexp.
+
+``smax_and_weights`` / ``smin_and_weights`` — the per-iteration gradient
+step of the MWU loop — dispatch through ``repro.kernels.dispatch``: under
+a pallas policy the shift/exp/normalize passes run as the single fused
+``softmax_weights`` kernel sweep; masked calls and the default XLA policy
+take the jnp path below (which is the kernel's oracle).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels import dispatch as _kd
 
 __all__ = [
     "smax",
@@ -77,9 +85,13 @@ def smin_weights(v: jax.Array, eta, where: jax.Array | None = None) -> jax.Array
 def smax_and_weights(v, eta, where=None):
     """One-pass (smax, softmax(eta v)) sharing the max-shift.
 
-    This is the math that kernels/softmax_weights fuses into a single
-    HBM sweep on TPU; here it is the XLA reference implementation.
+    Unmasked calls dispatch to the fused ``kernels.softmax_weights``
+    Pallas sweep when the active policy selects it; the jnp path below
+    is both the XLA implementation and the kernel's oracle.
     """
+    if where is None and _kd.choose("softmax", v) == "pallas":
+        lse, w = _kd.softmax_pallas(v, eta, sign=1.0)
+        return lse / eta, w
     a = eta * v
     if where is not None:
         a = jnp.where(where, a, -jnp.inf)
@@ -91,7 +103,13 @@ def smax_and_weights(v, eta, where=None):
 
 
 def smin_and_weights(v, eta, where=None):
-    """One-pass (smin, softmax(-eta v)) sharing the max-shift."""
+    """One-pass (smin, softmax(-eta v)) sharing the max-shift.
+
+    Dispatches like :func:`smax_and_weights` (sign=-1 kernel variant).
+    """
+    if where is None and _kd.choose("softmax", v) == "pallas":
+        lse, w = _kd.softmax_pallas(v, eta, sign=-1.0)
+        return -lse / eta, w
     a = -eta * v
     if where is not None:
         a = jnp.where(where, a, -jnp.inf)

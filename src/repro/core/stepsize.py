@@ -23,6 +23,17 @@ f(alpha) >= 1 (Algorithm 3 line 4): that step completes the solve.
 Everything here runs inside the jitted MWU while-loop, so the searches
 are themselves ``lax.while_loop``s with iteration caps. Probe counts are
 returned for the Table-3 statistics.
+
+Probes dominate MWU runtime (Table 3: tens of probes per iteration, each
+a multi-pass reduction over both constraint vectors). Under a pallas
+:class:`~repro.kernels.dispatch.KernelPolicy`, :func:`make_probe_fn`
+therefore routes every probe through the fused
+``kernels.linesearch_probe`` sweep — one pass over (y, dy) and one over
+(z, dz) yields Psi/Phi, their Newton slopes, and the completion test
+``min(z + alpha dz)``, collapsing the ~6 m-length passes the XLA path
+below reads per probe. Masked problems (padded lpserve rows) and the
+default XLA policy keep the jnp path, which doubles as the kernel's
+oracle.
 """
 from __future__ import annotations
 
@@ -31,6 +42,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import dispatch as _kd
 from .smoothing import logsumexp_shifted
 
 __all__ = ["StepSizeResult", "standard_step", "binary_search_step", "newton_step"]
@@ -67,10 +79,32 @@ class _Probe(NamedTuple):
 def make_probe_fn(y, z, dy, dz, eta, p_mask=None, c_mask=None, with_grad=False):
     """Close over the iteration state; returns probe(alpha) -> _Probe.
 
-    Uses a shared shift per logsumexp (the fused `linesearch_probe` Pallas
-    kernel implements exactly this math in one sweep; see kernels/).
+    Dispatch (decided once, at trace time): unmasked problems under a
+    pallas policy evaluate each probe as two fused ``linesearch_probe``
+    kernel sweeps (packing side sign=+1, covering side sign=-1 — lse,
+    Newton slope and min(z + alpha dz) in one read of each vector pair);
+    otherwise the jnp path below computes the same quantities from
+    shared-shift logsumexps.
     """
     tiny = jnp.asarray(jnp.finfo(y.dtype).tiny, y.dtype)
+
+    if p_mask is None and c_mask is None and _kd.choose("probe", y) == "pallas":
+        dt = y.dtype
+        eta_ = jnp.asarray(eta, dt)
+        zero = jnp.zeros((), dt)
+        lse_y0, _, _ = _kd.probe_pallas(y, dy, zero, eta_, sign=1.0)
+        lse_z0, _, _ = _kd.probe_pallas(z, dz, zero, eta_, sign=-1.0)
+
+        def probe_kernel(alpha):
+            lse_ya, dpsi, _ = _kd.probe_pallas(y, dy, alpha, eta_, sign=1.0)
+            lse_za, dphi, min_z = _kd.probe_pallas(z, dz, alpha, eta_, sign=-1.0)
+            psi = (lse_ya - lse_y0) / eta_
+            phi = -(lse_za - lse_z0) / eta_  # smin = -lse(-eta z)/eta
+            f = jnp.where(psi <= tiny, jnp.inf, phi / jnp.maximum(psi, tiny))
+            # the kernel's Newton slopes are free; with_grad is moot here
+            return _Probe(f=f, phi=phi, psi=psi, dphi=dphi, dpsi=dpsi, min_z=min_z)
+
+        return probe_kernel
 
     ay = eta * y
     az = -eta * z

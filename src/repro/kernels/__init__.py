@@ -9,4 +9,15 @@ and ref.py (pure-jnp oracle used by tests/test_kernels.py sweeps):
   axpy_reduce      — fused x+alpha*d with min/max reductions (Alg.2 l.14-15)
   linesearch_probe — fused Phi/Psi/derivative probe (Alg. 3 inner loop)
   flash_attention  — causal/SWA/GQA streaming attention (plane B prefill)
+
+:mod:`repro.kernels.dispatch` is the backend-selection layer that routes
+the MWU iteration itself (``core.operators`` / ``core.smoothing`` /
+``core.stepsize`` / ``core.mwu``) through these kernels: a host-side
+``resolve()`` turns a ``"auto" | "pallas" | "xla"`` request into a frozen
+:class:`~repro.kernels.dispatch.KernelPolicy` (baked into jit cache
+keys), ``use_policy()`` scopes it over a trace, and per-op gates fall
+back to the legacy jnp expressions for masked reductions, f64 on real
+TPUs, and gathers past the VMEM vertex limit.  Batched callers keep
+working because each kernel wrapper is a ``jax.custom_batching.custom_vmap``
+whose batch rule vmaps the jnp oracle.
 """

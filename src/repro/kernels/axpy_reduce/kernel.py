@@ -5,7 +5,10 @@
 One HBM sweep covers Alg. 2 lines 14-15 plus the loop-condition
 reductions (max packing / min covering values) that would otherwise be
 three extra passes — the same fusion the paper implements with OpenMP
-loop fusion (§5.1.3). Padded lanes contribute +inf/-inf neutrally.
+loop fusion (§5.1.3). ``core.mwu._iteration`` routes the x/y/z update
+triple through this kernel when the dispatch layer selects pallas.
+Padded lanes contribute +inf/-inf neutrally; arithmetic runs in the
+input dtype.
 """
 from __future__ import annotations
 
@@ -27,20 +30,21 @@ _NEG = -1e30
 def _axpy_kernel(n, alpha_ref, y_ref, dy_ref, out_ref, red_ref, acc_ref):
     i = pl.program_id(0)
     nt = pl.num_programs(0)
+    dt = acc_ref.dtype
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[0] = jnp.float32(_POS)  # running min
-        acc_ref[1] = jnp.float32(_NEG)  # running max
+        acc_ref[0] = jnp.asarray(_POS, dt)  # running min
+        acc_ref[1] = jnp.asarray(_NEG, dt)  # running max
 
-    out = y_ref[...].astype(jnp.float32) + alpha_ref[0] * dy_ref[...].astype(jnp.float32)
+    out = y_ref[...] + alpha_ref[0] * dy_ref[...]
     idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
         jnp.int32, (SUBLANES, LANES), 1
     )
     valid = (i * TILE + idx) < n
-    out_ref[...] = jnp.where(valid, out, 0.0)
-    acc_ref[0] = jnp.minimum(acc_ref[0], jnp.min(jnp.where(valid, out, _POS)))
-    acc_ref[1] = jnp.maximum(acc_ref[1], jnp.max(jnp.where(valid, out, _NEG)))
+    out_ref[...] = jnp.where(valid, out, jnp.zeros((), dt))
+    acc_ref[0] = jnp.minimum(acc_ref[0], jnp.min(jnp.where(valid, out, jnp.asarray(_POS, dt))))
+    acc_ref[1] = jnp.maximum(acc_ref[1], jnp.max(jnp.where(valid, out, jnp.asarray(_NEG, dt))))
 
     @pl.when(i == nt - 1)
     def _fin():
@@ -51,11 +55,12 @@ def _axpy_kernel(n, alpha_ref, y_ref, dy_ref, out_ref, red_ref, acc_ref):
 def axpy_reduce_pallas(y, dy, alpha, interpret: bool = True):
     """Returns (y + alpha*dy, min, max) in one pass."""
     n = y.shape[0]
+    dt = y.dtype
     nt = max(1, (n + TILE - 1) // TILE)
     pad = nt * TILE - n
-    yp = jnp.pad(y.astype(jnp.float32), (0, pad)).reshape(nt * SUBLANES, LANES)
-    dp = jnp.pad(dy.astype(jnp.float32), (0, pad)).reshape(nt * SUBLANES, LANES)
-    a = alpha.astype(jnp.float32).reshape(1)
+    yp = jnp.pad(y, (0, pad)).reshape(nt * SUBLANES, LANES)
+    dp = jnp.pad(dy.astype(dt), (0, pad)).reshape(nt * SUBLANES, LANES)
+    a = alpha.astype(dt).reshape(1)
     out, red = pl.pallas_call(
         functools.partial(_axpy_kernel, n),
         grid=(nt,),
@@ -69,10 +74,10 @@ def axpy_reduce_pallas(y, dy, alpha, interpret: bool = True):
             pl.BlockSpec((2,), lambda i: (0,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((nt * SUBLANES, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((2,), jnp.float32),
+            jax.ShapeDtypeStruct((nt * SUBLANES, LANES), dt),
+            jax.ShapeDtypeStruct((2,), dt),
         ],
-        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        scratch_shapes=[pltpu.SMEM((2,), dt)],
         interpret=interpret,
     )(a, yp, dp)
     return out.reshape(-1)[:n], red[0], red[1]

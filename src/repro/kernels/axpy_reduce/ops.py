@@ -1,17 +1,25 @@
-"""Jitted dispatcher for the fused update (Alg. 2 lines 14-15 + cond)."""
+"""Dispatcher for the fused update (Alg. 2 lines 14-15 + cond).
+
+Backend resolution happens host-side in the wrapper (not at trace time
+inside the jit); see ``repro.kernels.dispatch``.
+"""
 from functools import partial
 
 import jax
 
+from ..dispatch import resolve_impl
 from .kernel import axpy_reduce_pallas
 from .ref import axpy_reduce_ref
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def axpy_reduce(y, dy, alpha, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def _axpy_reduce_jit(y, dy, alpha, impl: str, interpret: bool):
     if impl == "pallas":
-        interpret = jax.default_backend() != "tpu"
         return axpy_reduce_pallas(y, dy, alpha, interpret=interpret)
     return axpy_reduce_ref(y, dy, alpha)
+
+
+def axpy_reduce(y, dy, alpha, impl: str = "auto"):
+    """(y + alpha*dy, min, max) in one fused sweep."""
+    impl, interpret = resolve_impl("axpy", impl, n=y.shape[0], dtype=y.dtype)
+    return _axpy_reduce_jit(y, dy, alpha, impl, interpret)

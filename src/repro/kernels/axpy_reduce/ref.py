@@ -1,7 +1,7 @@
-"""Pure-jnp oracle for axpy_reduce."""
+"""Pure-jnp oracle for axpy_reduce (dtype-preserving)."""
 import jax.numpy as jnp
 
 
 def axpy_reduce_ref(y, dy, alpha):
-    out = y.astype(jnp.float32) + alpha.astype(jnp.float32) * dy.astype(jnp.float32)
+    out = y + alpha * dy
     return out, jnp.min(out), jnp.max(out)

@@ -11,8 +11,11 @@ vertex blocks, accumulating partial gathers — edges are pre-sorted by
 endpoint block by `sparsela.partition`, so each edge tile touches one
 block per endpoint).
 
-This single-block variant holds w fully in VMEM (graphs to ~4M vertices
-in f32); ops.py falls back to the XLA path beyond that.
+This single-block variant holds w fully in VMEM; the dispatch layer
+(`repro.kernels.dispatch.VMEM_VERTEX_LIMIT`, 3M f32 vertices — see the
+headroom math there) falls back to the XLA path beyond that. The gather
+runs in the input dtype end to end: f64 solves keep full precision
+through the kernel path (interpret mode; real TPUs gate f64 to XLA).
 """
 from __future__ import annotations
 
@@ -39,7 +42,7 @@ def _gather_kernel(E, u_ref, v_ref, w_ref, out_ref):
     v = jnp.where(valid, v, 0)
     w = w_ref[...]
     g = jnp.take(w, u.reshape(-1), axis=0) + jnp.take(w, v.reshape(-1), axis=0)
-    out_ref[...] = jnp.where(valid, g.reshape(SUBLANES, LANES), 0.0)
+    out_ref[...] = jnp.where(valid, g.reshape(SUBLANES, LANES), jnp.zeros((), w.dtype))
 
 
 def incidence_gather_pallas(u, v, w, interpret: bool = True):
@@ -51,7 +54,7 @@ def incidence_gather_pallas(u, v, w, interpret: bool = True):
     vp = jnp.pad(v, (0, pad)).reshape(nt * SUBLANES, LANES)
     n = w.shape[0]
     n_pad = ((n + LANES - 1) // LANES) * LANES
-    wp = jnp.pad(w.astype(jnp.float32), (0, n_pad - n))
+    wp = jnp.pad(w, (0, n_pad - n))
 
     g = pl.pallas_call(
         functools.partial(_gather_kernel, E),
@@ -62,7 +65,7 @@ def incidence_gather_pallas(u, v, w, interpret: bool = True):
             pl.BlockSpec((n_pad,), lambda i: (0,)),  # w resident in VMEM
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nt * SUBLANES, LANES), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nt * SUBLANES, LANES), w.dtype),
         interpret=interpret,
     )(up, vp, wp)
     return g.reshape(-1)[:E]

@@ -1,20 +1,30 @@
-"""Jitted dispatcher for the incidence gather (M^T w)."""
+"""Dispatcher for the incidence gather (M^T w).
+
+Backend resolution is hoisted OUT of the jitted inner function: the old
+version keyed on ``jax.default_backend()`` at trace time inside a
+``@jax.jit``, so a CPU→TPU device switch could keep serving the stale
+cached choice. Now the host-side wrapper resolves ``impl`` per call (via
+``repro.kernels.dispatch.resolve_impl``, which also applies the
+``VMEM_VERTEX_LIMIT`` gate and the ``REPRO_KERNEL_BACKEND`` override)
+and the concrete choice is a static argument of the jitted inner.
+"""
 from functools import partial
 
 import jax
 
+from ..dispatch import resolve_impl
 from .kernel import incidence_gather_pallas
 from .ref import incidence_gather_ref
 
-# beyond this vertex count w no longer fits VMEM single-block
-_VMEM_VERTEX_LIMIT = 3_000_000
 
-
-@partial(jax.jit, static_argnames=("impl",))
-def incidence_gather(u, v, w, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if (jax.default_backend() == "tpu" and w.shape[0] <= _VMEM_VERTEX_LIMIT) else "xla"
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def _incidence_gather_jit(u, v, w, impl: str, interpret: bool):
     if impl == "pallas":
-        interpret = jax.default_backend() != "tpu"
         return incidence_gather_pallas(u, v, w, interpret=interpret)
     return incidence_gather_ref(u, v, w)
+
+
+def incidence_gather(u, v, w, impl: str = "auto"):
+    """g[e] = w[u[e]] + w[v[e]] in w's dtype; zero for padded edge slots."""
+    impl, interpret = resolve_impl("gather", impl, n=w.shape[0], dtype=w.dtype)
+    return _incidence_gather_jit(u, v, w, impl, interpret)

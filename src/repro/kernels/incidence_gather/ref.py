@@ -1,7 +1,5 @@
-"""Pure-jnp oracle for incidence_gather."""
-import jax.numpy as jnp
+"""Pure-jnp oracle for incidence_gather (dtype-preserving)."""
 
 
 def incidence_gather_ref(u, v, w):
-    w = w.astype(jnp.float32)
     return w[u] + w[v]

@@ -10,12 +10,16 @@ For one probe point alpha, over a constraint vector pair (y, dy):
 Everything a binary-search or Newton probe needs, in ONE sweep of
 (y, dy) — the unfused XLA path reads both vectors 3-4 times. The paper
 identifies exactly this "search" vector work as 20-50% of runtime
-(Fig. 5a); this kernel is its TPU counterpart.
+(Fig. 5a); this kernel is its TPU counterpart, and
+``core.stepsize.make_probe_fn`` routes every probe through it when the
+dispatch layer selects the pallas backend.
 
 Online update per tile (flash-style):
     m' = max(m, max(a));  c = exp(m - m')
     s' = s*c + sum exp(a - m');  t' = t*c + sum exp(a - m') * dy
 (final t/s = <softmax(a), dy>, computed by the host wrapper).
+
+Arithmetic runs in the input dtype (f64 stays f64 in interpret mode).
 """
 from __future__ import annotations
 
@@ -38,25 +42,26 @@ def _probe_kernel(n, scal_ref, y_ref, dy_ref, out_ref, acc_ref):
     """scal = [sign*eta, alpha]; out = [m, lse, t_scaled, min_v]."""
     i = pl.program_id(0)
     nt = pl.num_programs(0)
+    dt = acc_ref.dtype
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[0] = jnp.float32(_NEG)  # running max m
-        acc_ref[1] = jnp.float32(0.0)  # running s
-        acc_ref[2] = jnp.float32(0.0)  # running t (softmax-weighted dy)
-        acc_ref[3] = jnp.float32(_POS)  # running min of v
+        acc_ref[0] = jnp.asarray(_NEG, dt)  # running max m
+        acc_ref[1] = jnp.asarray(0.0, dt)  # running s
+        acc_ref[2] = jnp.asarray(0.0, dt)  # running t (softmax-weighted dy)
+        acc_ref[3] = jnp.asarray(_POS, dt)  # running min of v
 
     se = scal_ref[0]
     alpha = scal_ref[1]
-    y = y_ref[...].astype(jnp.float32)
-    dy = dy_ref[...].astype(jnp.float32)
+    y = y_ref[...]
+    dy = dy_ref[...]
     v = y + alpha * dy
     a = v * se
     idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
         jnp.int32, (SUBLANES, LANES), 1
     )
     valid = (i * TILE + idx) < n
-    a = jnp.where(valid, a, _NEG)
+    a = jnp.where(valid, a, jnp.asarray(_NEG, dt))
 
     m_old, s_old, t_old = acc_ref[0], acc_ref[1], acc_ref[2]
     m_new = jnp.maximum(m_old, jnp.max(a))
@@ -64,8 +69,8 @@ def _probe_kernel(n, scal_ref, y_ref, dy_ref, out_ref, acc_ref):
     e = jnp.exp(a - m_new)
     acc_ref[0] = m_new
     acc_ref[1] = s_old * c + jnp.sum(e)
-    acc_ref[2] = t_old * c + jnp.sum(e * jnp.where(valid, dy, 0.0))
-    acc_ref[3] = jnp.minimum(acc_ref[3], jnp.min(jnp.where(valid, v, _POS)))
+    acc_ref[2] = t_old * c + jnp.sum(e * jnp.where(valid, dy, jnp.zeros((), dt)))
+    acc_ref[3] = jnp.minimum(acc_ref[3], jnp.min(jnp.where(valid, v, jnp.asarray(_POS, dt))))
 
     @pl.when(i == nt - 1)
     def _fin():
@@ -78,11 +83,12 @@ def _probe_kernel(n, scal_ref, y_ref, dy_ref, out_ref, acc_ref):
 def linesearch_probe_pallas(y, dy, alpha, eta, sign: float = 1.0, interpret: bool = True):
     """Returns (lse, slope, min_v) for a = sign*eta*(y + alpha*dy)."""
     n = y.shape[0]
+    dt = y.dtype
     nt = max(1, (n + TILE - 1) // TILE)
     pad = nt * TILE - n
-    yp = jnp.pad(y.astype(jnp.float32), (0, pad)).reshape(nt * SUBLANES, LANES)
-    dp = jnp.pad(dy.astype(jnp.float32), (0, pad)).reshape(nt * SUBLANES, LANES)
-    scal = jnp.stack([jnp.float32(sign) * eta.astype(jnp.float32), alpha.astype(jnp.float32)])
+    yp = jnp.pad(y, (0, pad)).reshape(nt * SUBLANES, LANES)
+    dp = jnp.pad(dy.astype(dt), (0, pad)).reshape(nt * SUBLANES, LANES)
+    scal = jnp.stack([jnp.asarray(sign, dt) * eta.astype(dt), alpha.astype(dt)])
     out = pl.pallas_call(
         functools.partial(_probe_kernel, n),
         grid=(nt,),
@@ -92,8 +98,8 @@ def linesearch_probe_pallas(y, dy, alpha, eta, sign: float = 1.0, interpret: boo
             pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((4,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((4,), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((4,), dt),
+        scratch_shapes=[pltpu.SMEM((4,), dt)],
         interpret=interpret,
     )(scal, yp, dp)
     return out[1], out[2], out[3]

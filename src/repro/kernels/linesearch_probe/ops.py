@@ -1,17 +1,25 @@
-"""Jitted dispatcher for the fused line-search probe."""
+"""Dispatcher for the fused line-search probe.
+
+Backend resolution happens host-side in the wrapper (not at trace time
+inside the jit); see ``repro.kernels.dispatch``.
+"""
 from functools import partial
 
 import jax
 
+from ..dispatch import resolve_impl
 from .kernel import linesearch_probe_pallas
 from .ref import linesearch_probe_ref
 
 
-@partial(jax.jit, static_argnames=("sign", "impl"))
-def linesearch_probe(y, dy, alpha, eta, sign: float = 1.0, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+@partial(jax.jit, static_argnames=("sign", "impl", "interpret"))
+def _linesearch_probe_jit(y, dy, alpha, eta, sign: float, impl: str, interpret: bool):
     if impl == "pallas":
-        interpret = jax.default_backend() != "tpu"
         return linesearch_probe_pallas(y, dy, alpha, eta, sign=sign, interpret=interpret)
     return linesearch_probe_ref(y, dy, alpha, eta, sign)
+
+
+def linesearch_probe(y, dy, alpha, eta, sign: float = 1.0, impl: str = "auto"):
+    """(lse, slope, min_v) for a = sign*eta*(y + alpha*dy), one fused sweep."""
+    impl, interpret = resolve_impl("probe", impl, n=y.shape[0], dtype=y.dtype)
+    return _linesearch_probe_jit(y, dy, alpha, eta, sign, impl, interpret)

@@ -1,11 +1,9 @@
-"""Pure-jnp oracle for linesearch_probe."""
+"""Pure-jnp oracle for linesearch_probe (dtype-preserving)."""
 import jax.numpy as jnp
 
 
 def linesearch_probe_ref(y, dy, alpha, eta, sign: float = 1.0):
-    y = y.astype(jnp.float32)
-    dy = dy.astype(jnp.float32)
-    v = y + alpha.astype(jnp.float32) * dy
+    v = y + alpha * dy
     a = (sign * eta) * v
     m = jnp.max(a)
     e = jnp.exp(a - m)

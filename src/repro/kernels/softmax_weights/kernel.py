@@ -11,6 +11,10 @@ exactly this gradient computation on CPU with OpenMP + AVX-512; on TPU
 the tile is an (8, 128)-aligned VMEM block and the reduction carry lives
 in SMEM scratch across a sequential 1-D grid.
 
+All arithmetic runs in the input dtype (f32 or, in interpret mode, f64 —
+the dispatch gate keeps f64 off real TPUs), so kernel and XLA paths
+agree to summation-order differences only.
+
 Masked (padded) entries are handled by an explicit length argument:
 lanes with global index >= n contribute -inf / 0.
 """
@@ -34,18 +38,19 @@ def _reduce_kernel(n, se_ref, v_ref, out_ref, acc_ref):
     """Pass 1: running (max m, sum s) over tiles; writes [m, lse] at the end."""
     i = pl.program_id(0)
     nt = pl.num_programs(0)
+    dt = acc_ref.dtype
 
     @pl.when(i == 0)
     def _init():
-        acc_ref[0] = jnp.float32(_NEG)  # running max
-        acc_ref[1] = jnp.float32(0.0)  # running sum (scaled by exp(-m))
+        acc_ref[0] = jnp.asarray(_NEG, dt)  # running max
+        acc_ref[1] = jnp.asarray(0.0, dt)  # running sum (scaled by exp(-m))
 
-    a = v_ref[...].astype(jnp.float32) * se_ref[0]
+    a = v_ref[...] * se_ref[0]
     idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
         jnp.int32, (SUBLANES, LANES), 1
     )
     valid = (i * TILE + idx) < n
-    a = jnp.where(valid, a, _NEG)
+    a = jnp.where(valid, a, jnp.asarray(_NEG, dt))
 
     m_old = acc_ref[0]
     s_old = acc_ref[1]
@@ -65,21 +70,22 @@ def _reduce_kernel(n, se_ref, v_ref, out_ref, acc_ref):
 def _normalize_kernel(n, se_ref, v_ref, lse_ref, w_ref):
     """Pass 2: w = exp(sign*eta*v - lse), zero on padded lanes."""
     i = pl.program_id(0)
-    a = v_ref[...].astype(jnp.float32) * se_ref[0]
+    a = v_ref[...] * se_ref[0]
     idx = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0) * LANES + jax.lax.broadcasted_iota(
         jnp.int32, (SUBLANES, LANES), 1
     )
     valid = (i * TILE + idx) < n
     w = jnp.exp(a - lse_ref[1])
-    w_ref[...] = jnp.where(valid, w, 0.0).astype(w_ref.dtype)
+    w_ref[...] = jnp.where(valid, w, jnp.zeros((), w.dtype)).astype(w_ref.dtype)
 
 
 def softmax_weights_pallas(v, eta, sign: float = 1.0, interpret: bool = True):
     """Returns (lse, w) with lse = logsumexp(sign*eta*v), w = softmax(sign*eta*v)."""
     n = v.shape[0]
+    dt = v.dtype
     nt = max(1, (n + TILE - 1) // TILE)
     vp = jnp.pad(v, (0, nt * TILE - n)).reshape(nt * SUBLANES, LANES)
-    se = (jnp.float32(sign) * eta.astype(jnp.float32)).reshape(1)
+    se = (jnp.asarray(sign, dt) * eta.astype(dt)).reshape(1)
 
     stats = pl.pallas_call(
         functools.partial(_reduce_kernel, n),
@@ -89,8 +95,8 @@ def softmax_weights_pallas(v, eta, sign: float = 1.0, interpret: bool = True):
             pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((2,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((2,), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((2,), dt),
+        scratch_shapes=[pltpu.SMEM((2,), dt)],
         interpret=interpret,
     )(se, vp)
 
@@ -103,7 +109,7 @@ def softmax_weights_pallas(v, eta, sign: float = 1.0, interpret: bool = True):
             pl.BlockSpec((2,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nt * SUBLANES, LANES), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((nt * SUBLANES, LANES), dt),
         interpret=interpret,
     )(se, vp, stats)
     return stats[1], w.reshape(-1)[:n]

@@ -1,24 +1,32 @@
-"""Jitted dispatcher: Pallas on TPU, interpret-mode Pallas or pure-jnp on CPU."""
+"""Dispatcher for the fused softmax-weights kernel.
+
+Backend resolution happens host-side in the wrapper (not at trace time
+inside the jit) so a device switch re-resolves instead of serving a
+stale cached choice; see ``repro.kernels.dispatch``.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from ..dispatch import resolve_impl
 from .kernel import softmax_weights_pallas
 from .ref import softmax_weights_ref
 
 
-@partial(jax.jit, static_argnames=("sign", "impl"))
+@partial(jax.jit, static_argnames=("sign", "impl", "interpret"))
+def _softmax_weights_jit(v, eta, sign: float, impl: str, interpret: bool):
+    if impl == "pallas":
+        return softmax_weights_pallas(v, eta, sign=sign, interpret=interpret)
+    return softmax_weights_ref(v, eta, sign=sign)
+
+
 def softmax_weights(v, eta, sign: float = 1.0, impl: str = "auto"):
     """(lse, w): lse = logsumexp(sign*eta*v); w = softmax(sign*eta*v).
 
     smax_eta(v) = lse/eta (sign=+1); smin_eta(v) = -lse/eta (sign=-1).
     impl: "auto" (pallas on TPU, xla elsewhere) | "pallas" | "xla".
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl == "pallas":
-        interpret = jax.default_backend() != "tpu"
-        return softmax_weights_pallas(v, eta, sign=sign, interpret=interpret)
-    return softmax_weights_ref(v, eta, sign=sign)
+    impl, interpret = resolve_impl("softmax", impl, n=v.shape[0], dtype=v.dtype)
+    return _softmax_weights_jit(v, eta, sign, impl, interpret)

@@ -1,9 +1,9 @@
-"""Pure-jnp oracle for the softmax_weights kernel."""
+"""Pure-jnp oracle for the softmax_weights kernel (dtype-preserving)."""
 import jax.numpy as jnp
 
 
 def softmax_weights_ref(v, eta, sign: float = 1.0):
-    a = (sign * eta) * v.astype(jnp.float32)
+    a = (sign * eta) * v
     m = jnp.max(a)
     s = jnp.sum(jnp.exp(a - m))
     lse = m + jnp.log(s)

@@ -1,7 +1,11 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
 
 Every Pallas kernel is exercised over aligned and ragged (non-tile-
-multiple) shapes and f32/f64-input dtypes, as the deliverable requires.
+multiple) shapes and f32/f64 dtypes, as the deliverable requires. The
+MWU kernels are dtype-preserving (the solver runs f64 under x64, f32
+otherwise), so each sweep runs in both dtypes with tolerances scaled to
+the element size. Dispatch-layer behaviour (policies, custom_vmap,
+operator wiring, end-to-end solves) lives in tests/test_kernel_dispatch.py.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -20,57 +24,73 @@ from repro.kernels.softmax_weights.ref import softmax_weights_ref
 from repro.models.layers import attention as att
 
 SIZES = [3, 127, 1024, 1030, 4096, 9999]
+DTYPES = [jnp.float32, jnp.float64]
+
+# tile-wise vs global reduction order: ~1e-4 absolute on f32 at eta~200,
+# vanishing at f64.
+TOLS = {jnp.float32: 1e-4, jnp.float64: 1e-10}
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("n", SIZES)
 @pytest.mark.parametrize("sign", [1.0, -1.0])
-def test_softmax_weights(n, sign):
+def test_softmax_weights(n, sign, dtype):
     rng = np.random.default_rng(n)
-    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
-    eta = jnp.float32(211.0)
+    tol = TOLS[dtype]
+    v = jnp.asarray(rng.standard_normal(n), dtype)
+    eta = jnp.asarray(211.0, dtype)
     lse_p, w_p = softmax_weights(v, eta, sign=sign, impl="pallas")
     lse_r, w_r = softmax_weights_ref(v, eta, sign)
-    np.testing.assert_allclose(float(lse_p), float(lse_r), rtol=1e-5)
-    # tile-wise vs global summation order: ~1e-4 absolute on f32 at eta~200
-    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_r), atol=1e-4)
-    np.testing.assert_allclose(float(w_p.sum()), 1.0, rtol=1e-4)
+    assert w_p.dtype == dtype and lse_p.dtype == dtype
+    np.testing.assert_allclose(float(lse_p), float(lse_r), rtol=tol)
+    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_r), atol=tol)
+    np.testing.assert_allclose(float(w_p.sum()), 1.0, rtol=tol)
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("n", SIZES)
-def test_axpy_reduce(n):
+def test_axpy_reduce(n, dtype):
     rng = np.random.default_rng(n)
-    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
-    dy = jnp.asarray(rng.random(n), jnp.float32)
-    a = jnp.float32(3.25)
+    tol = min(TOLS[dtype], 1e-6)
+    y = jnp.asarray(rng.standard_normal(n), dtype)
+    dy = jnp.asarray(rng.random(n), dtype)
+    a = jnp.asarray(3.25, dtype)
     out_p, mn_p, mx_p = axpy_reduce(y, dy, a, impl="pallas")
     out_r, mn_r, mx_r = axpy_reduce_ref(y, dy, a)
-    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), atol=1e-6)
-    assert abs(float(mn_p - mn_r)) < 1e-6
-    assert abs(float(mx_p - mx_r)) < 1e-6
+    assert out_p.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r), atol=tol)
+    assert abs(float(mn_p - mn_r)) < tol
+    assert abs(float(mx_p - mx_r)) < tol
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("E,n", [(17, 5), (2048, 300), (4100, 999)])
-def test_incidence_gather(E, n):
+def test_incidence_gather(E, n, dtype):
     rng = np.random.default_rng(E)
     u = jnp.asarray(rng.integers(0, n, E), jnp.int32)
     v = jnp.asarray(rng.integers(0, n, E), jnp.int32)
-    w = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(n), dtype)
     g_p = incidence_gather(u, v, w, impl="pallas")
     g_r = incidence_gather_ref(u, v, w)
-    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_r), atol=1e-6)
+    # pure gather+add: dtype-preserving and exact in both dtypes
+    assert g_p.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(g_p), np.asarray(g_r))
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("n", [9, 1024, 3333])
 @pytest.mark.parametrize("sign", [1.0, -1.0])
-def test_linesearch_probe(n, sign):
+def test_linesearch_probe(n, sign, dtype):
     rng = np.random.default_rng(n)
-    y = jnp.asarray(rng.random(n), jnp.float32)
-    dy = jnp.asarray(rng.random(n) * 1e-3, jnp.float32)
-    alpha = jnp.float32(7.5)
-    eta = jnp.float32(97.0)
+    tol = TOLS[dtype]
+    y = jnp.asarray(rng.random(n), dtype)
+    dy = jnp.asarray(rng.random(n) * 1e-3, dtype)
+    alpha = jnp.asarray(7.5, dtype)
+    eta = jnp.asarray(97.0, dtype)
     p = linesearch_probe(y, dy, alpha, eta, sign=sign, impl="pallas")
     r = linesearch_probe_ref(y, dy, alpha, eta, sign)
-    for a, b, tol in zip(p, r, (1e-4, 1e-6, 1e-6)):
+    assert all(a.dtype == dtype for a in p)
+    for a, b in zip(p, r):
         assert abs(float(a) - float(b)) < tol, (sign, float(a), float(b))
 
 
