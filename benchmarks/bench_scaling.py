@@ -1,15 +1,24 @@
-"""Figure 4 / Table 4 analogue: distributed-MWU scaling.
+"""Figure 4 / Table 4 analogue: distributed-MWU scaling on repro.dist.
 
-Wall-clock strong scaling on fabricated host devices is meaningless on
-one CPU core, so this benchmark reports what actually scales: the
-per-device work and communication of one distributed MWU iteration,
-derived from compiled HLO at grid sizes G in {2, 4, 8, 16}, plus a
-real multi-device correctness run at G=2 (4 host devices, subprocess).
+Strong scaling of the mesh-sharded :class:`repro.dist.DistSolver` over
+fabricated host devices (``--xla_force_host_platform_device_count``).
+Each device count runs in its own subprocess (the main process keeps one
+device), solving the same problem two ways:
 
-comm/comp ratio is the paper's Table 4 parenthesized metric.
+* ``pod=N``  edge-slab matching feasibility — the paper's MPI edge
+  partition: each device owns E/N incidence rows, psum is the neighbor
+  exchange. Reports MWU iteration throughput (iters/s, wall).
+* ``data=N`` batched bound fan-out — N binary-search probes solved as
+  one shard_map launch, one lane per device. Reports lane throughput
+  (lane-iters/s).
 
-Emits CSV: grid,devices,flops_per_dev,hbm_bytes_per_dev,wire_bytes_per_dev,
-comm_comp_ratio.
+Fabricated devices share one CPU, so wall-clock *speedup* is not
+expected; what the numbers certify is that per-device work shrinks with
+pod (iters/s should not collapse as N grows) and that the data axis
+fans out at near-constant cost per lane.
+
+``run()`` prints the CSV and returns the records dict that
+``benchmarks/run.py`` serializes to ``BENCH_dist.json``.
 """
 from __future__ import annotations
 
@@ -26,60 +35,63 @@ _PROG = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
 import sys; sys.path.insert(0, {src!r})
-import json
-import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core.mwu_dist import _dist_solve_local
-from repro.core.mwu import make_eta
-from repro.launch.mesh import make_mesh
-from repro.utils.hlo import analyze_hlo
+import json, time
+import numpy as np
+from repro.core.mwu import MWUOptions
+from repro.dist import DistSolver, MeshPlan
+from repro.graphs.generators import rgg
+from repro.graphs.problems import matching_lp
 
-G = {grid}
-n = 1 << 20
-m = 16 * n
-block = n // G
-e_cell = int(m / (G*G) * 1.3)
-mesh = make_mesh((G, G), ("data", "model"))
-eta = jnp.asarray(make_eta(n + 1, 0.1), jnp.float32)
+g = rgg({scale}, seed=7)
+prob = matching_lp(g)
+opts = MWUOptions(eps=0.1, max_iter={max_iter})
+rec = {{"devices": {ndev}, "n_vertices": g.n, "n_edges": g.m}}
 
-def single(u, v, msk, x0):
-    def inner(u, v, msk, x0):
-        out = _dist_solve_local(G, block, n, eta, 0.1, jnp.float32(1.0/(n/4)), 1, u[0,0], v[0,0], msk[0,0], x0[0,0])
-        x, *rest = out
-        return (x[None, None], *rest)
-    return jax.shard_map(inner, mesh=mesh,
-        in_specs=(P("data","model",None),)*4,
-        out_specs=(P("data","model",None), P(), P(), P(), P(), P()),
-        check_vma=False)(u, v, msk, x0)
+# pod=N: edge-slab sharded feasibility (the paper's partition scheme)
+solver = DistSolver(opts, plan=MeshPlan(pod={ndev}, data=1))
+r = solver.feasible(prob, prob.lo)          # compile
+t0 = time.perf_counter(); r = solver.feasible(prob, prob.lo)
+dt = time.perf_counter() - t0
+it = int(np.asarray(r.iters))
+rec["pod"] = {{"iters": it, "seconds": dt, "iters_per_s": it / max(dt, 1e-9),
+               "status": int(np.asarray(r.status)),
+               "psum_rounds": solver.dist_stats["psum_rounds"]}}
 
-sds = jax.ShapeDtypeStruct
-args = (sds((G,G,e_cell), jnp.int32), sds((G,G,e_cell), jnp.int32),
-        sds((G,G,e_cell), jnp.bool_), sds((G,G,e_cell), jnp.float32))
-sh = (NamedSharding(mesh, P("data","model",None)),)*4
-with mesh:
-    c = jax.jit(single, in_shardings=sh).lower(*args).compile()
-rep = analyze_hlo(c.as_text(), num_partitions=G*G)
-print(json.dumps({{"flops": rep.flops, "bytes": rep.hbm_bytes,
-                  "wire": rep.collective_wire_bytes}}))
+# data=N: one probe per device, a full binary-search fan-out in 1 launch
+bounds = list(np.linspace(prob.lo, prob.hi, {ndev}))
+solver = DistSolver(opts, plan=MeshPlan(pod=1, data={ndev}))
+res = solver.solve_batch(prob, bounds)      # compile
+t0 = time.perf_counter(); res = solver.solve_batch(prob, bounds)
+dt = time.perf_counter() - t0
+lane_it = int(np.asarray(res.iters).sum())
+rec["data"] = {{"lanes": {ndev}, "lane_iters": lane_it, "seconds": dt,
+                "lane_iters_per_s": lane_it / max(dt, 1e-9),
+                "feasible_lanes": int(np.asarray(res.feasible).sum())}}
+print(json.dumps(rec))
 """
 
 
-def run(grids=(2, 4, 8, 16)):
-    csv = Csv("grid,devices,flops_per_dev,hbm_bytes_per_dev,wire_bytes_per_dev,comm_comp_ratio")
-    from repro.utils.roofline import HBM_BW, ICI_BW
-
-    for G in grids:
-        ndev = G * G
-        prog = _PROG.format(ndev=min(ndev, 256), src=SRC, grid=G)
+def run(quick: bool = False):
+    """Benchmark DistSolver across device counts; returns the records dict."""
+    counts = (1, 2, 4) if quick else (1, 2, 4, 8)
+    scale = 10 if quick else 12
+    max_iter = 300 if quick else 2000
+    csv = Csv(
+        "devices,pod_iters_per_s,pod_psum_rounds,data_lane_iters_per_s,data_feasible_lanes"
+    )
+    records = {"bench": "dist_scaling", "quick": quick, "scale": scale,
+               "max_iter": max_iter, "per_devices": []}
+    for ndev in counts:
+        prog = _PROG.format(ndev=ndev, src=SRC, scale=scale, max_iter=max_iter)
         res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                             text=True, timeout=1200)
+                             text=True, timeout=1800)
         if res.returncode != 0:
-            csv.add(G, ndev, "FAIL", res.stderr[-120:].replace("\n", " "), "-", "-")
+            csv.add(ndev, "FAIL", res.stderr[-120:].replace("\n", " "), "-", "-")
+            records["per_devices"].append({"devices": ndev, "error": res.stderr[-2000:]})
             continue
         d = json.loads(res.stdout.strip().splitlines()[-1])
-        comm_s = d["wire"] / ICI_BW
-        comp_s = d["bytes"] / HBM_BW  # memory-bound workload
-        csv.add(G, ndev, f"{d['flops']:.3e}", f"{d['bytes']:.3e}",
-                f"{d['wire']:.3e}", f"{comm_s/max(comp_s,1e-12):.3f}")
+        records["per_devices"].append(d)
+        csv.add(ndev, f"{d['pod']['iters_per_s']:.1f}", d["pod"]["psum_rounds"],
+                f"{d['data']['lane_iters_per_s']:.1f}", d["data"]["feasible_lanes"])
     csv.dump()
-    return csv
+    return records

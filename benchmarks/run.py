@@ -4,14 +4,15 @@
   table3  bench_stepsize     std / binary / newton step rules
   fig3    bench_convergence  MWU vs MPCSolver iteration counts
   fig5    bench_breakdown    component split + implicit-vs-explicit
-  fig4    bench_scaling      distributed per-device work/comm vs grid
+  fig4    bench_scaling      DistSolver pod/data scaling vs device count
+                             (writes BENCH_dist.json at the repo root)
   roofline bench_roofline    dry-run roofline table (§Roofline source)
   serving bench_serving      lpserve continuous batching vs sequential
   kernels bench_kernels      pallas kernel pack vs XLA, per op + solve
                              (writes BENCH_kernels.json at the repo root)
 
 ``python -m benchmarks.run [section ...] [--quick]`` — default: all.
-``--quick`` shrinks the kernels section to CI-smoke sizes. The solver
+``--quick`` shrinks the kernels and fig4 sections to CI-smoke sizes. The solver
 benches enable x64 (paper runs in f64 on CPU; DESIGN.md §7).
 """
 from __future__ import annotations
@@ -57,7 +58,10 @@ def main() -> None:
         elif s == "fig4":
             from . import bench_scaling
 
-            bench_scaling.run()
+            records = bench_scaling.run(quick=quick)
+            out = Path(__file__).resolve().parents[1] / "BENCH_dist.json"
+            out.write_text(json.dumps(records, indent=2) + "\n")
+            print(f"wrote {out}", flush=True)
         elif s == "roofline":
             from . import bench_roofline
 

@@ -13,7 +13,7 @@ binary-search bounds and graph instances. ``solve`` / ``solve_traced``
 and the ``feasibility`` drivers remain for direct low-level use and
 backwards compatibility.
 """
-from .mwu import MWUOptions, MWUResult, Status, solve, solve_traced
+from .mwu import MWUOptions, MWUResult, Status
 from .operators import (
     AdjacencyPlusId,
     Coo,
@@ -27,13 +27,34 @@ from .operators import (
     VertexEdgePair,
     VStack,
 )
-from .feasibility import (
-    BinarySearchResult,
-    densest_subgraph_search,
-    maximize_packing,
-    minimize_covering,
-)
 from .gradient_descent import MPCOptions, mpc_solve
+
+# Deprecated package-level entry points, resolved lazily (PEP 562) so the
+# one-per-process DeprecationWarning fires only when legacy code actually
+# reaches for them — importing repro.core itself stays silent.
+_DEPRECATED = {
+    "solve": ("repro.core.solve", ".mwu", "repro.api.Solver.feasible"),
+    "solve_traced": ("repro.core.solve_traced", ".mwu", "repro.api.Solver.feasible(trace=True)"),
+    "BinarySearchResult": ("repro.core.feasibility", ".feasibility", "repro.api.Solution"),
+    "maximize_packing": ("repro.core.feasibility", ".feasibility", "repro.api.Solver.solve"),
+    "minimize_covering": ("repro.core.feasibility", ".feasibility", "repro.api.Solver.solve"),
+    "densest_subgraph_search": ("repro.core.feasibility", ".feasibility", "repro.api.Solver.solve"),
+    "mwu_dist": ("core.mwu_dist", ".mwu_dist", "repro.dist.DistSolver"),
+}
+
+
+def __getattr__(name):
+    entry = _DEPRECATED.get(name)
+    if entry is None:
+        raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+    import importlib
+
+    from ..utils.deprecation import warn_once
+
+    key, module, replacement = entry
+    warn_once(key, f"{key} is deprecated; use {replacement}")
+    mod = importlib.import_module(module, __name__)
+    return mod if name == "mwu_dist" else getattr(mod, name)
 
 __all__ = [
     "MWUOptions",

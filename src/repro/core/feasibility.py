@@ -29,8 +29,15 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from ..utils.deprecation import warn_once
 from .mwu import MWUOptions, MWUResult
 from .operators import LinOp
+
+warn_once(
+    "repro.core.feasibility",
+    "repro.core.feasibility is deprecated; build a repro.api.Problem and use "
+    "repro.api.Solver.solve (or repro.dist.DistSolver for mesh-sharded runs)",
+)
 
 __all__ = [
     "BinarySearchResult",

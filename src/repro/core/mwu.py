@@ -107,18 +107,25 @@ def make_eta(m: int, eps: float, eta_factor: float = 10.0):
     return eta_factor * np.log(max(m, 2)) / eps
 
 
-def init_x(P: LinOp, eps: float, dtype) -> jax.Array:
+def init_x(P: LinOp, eps: float, dtype, n_cols: int | None = None, axis=None) -> jax.Array:
     """x_i = eps / (n * ||P_{:,i}||_inf)  (paper Alg. 1 line 3).
 
     Guarantees every packing row starts at most eps. Columns absent from P
     (colmax = 0) would start unbounded; they are clamped to the max of the
     present columns' scale (only well-posed LPs reach us in practice).
+
+    ``n_cols`` overrides the column count when ``P`` is a per-device
+    shard of a wider operator (repro.dist slab sharding), so the init
+    scale matches the single-device solve; ``axis`` names the mesh axis
+    the fallback min must reduce over in that case.
     """
-    n = P.shape[1]
+    n = P.shape[1] if n_cols is None else n_cols
     cm = P.colmax().astype(dtype)
     safe = jnp.where(cm > 0, cm, jnp.inf)
     x = eps / (n * safe)
     fallback = jnp.min(jnp.where(cm > 0, x, jnp.inf))
+    if axis is not None:
+        fallback = jax.lax.pmin(fallback, axis)
     fallback = jnp.where(jnp.isfinite(fallback), fallback, eps / n)
     return jnp.where(cm > 0, x, fallback).astype(dtype)
 
@@ -141,8 +148,17 @@ def _masked_max(v, mask):
     return jnp.max(v) if mask is None else jnp.max(jnp.where(mask, v, -jnp.inf))
 
 
-def _iteration(P: LinOp, C: LinOp, eta, scale, step_fn, ls_eps, p_mask, c_mask, carry: _Carry) -> _Carry:
-    """One MWU iteration (Alg. 2 body). Returns the updated carry."""
+def _iteration(P: LinOp, C: LinOp, eta, scale, step_fn, ls_eps, p_mask, c_mask, axis, carry: _Carry) -> _Carry:
+    """One MWU iteration (Alg. 2 body). Returns the updated carry.
+
+    ``axis`` (a mesh axis name or None) marks an SPMD run where the
+    variable space is slab-sharded across that axis (repro.dist): the
+    only variable-space *global* reduction in the body — the
+    infeasible-direction test on ``max(d)`` — then psum-completes via
+    ``lax.pmax``. Constraint-space vectors (y, z, dy, dz) stay
+    replicated across the axis (the sharded operators psum their
+    matvec outputs), so the smoothing/step-size math needs no change.
+    """
     x, y, z = carry.x, carry.y, carry.z
     dt = x.dtype
     tiny = jnp.asarray(jnp.finfo(dt).tiny, dt)
@@ -158,6 +174,8 @@ def _iteration(P: LinOp, C: LinOp, eta, scale, step_fn, ls_eps, p_mask, c_mask, 
     d = scale * jnp.maximum(0.0, 1.0 - ratio) * x
 
     max_d = jnp.max(d)
+    if axis is not None:
+        max_d = jax.lax.pmax(max_d, axis)
     infeasible_dir = max_d <= 0  # line 8
 
     # step images (line 10) — the second SpMV pair
@@ -243,7 +261,17 @@ def _trace_emit(it, viol, alpha, probes):
         _TRACE.rows.append((int(it), float(viol), float(alpha), int(probes)))
 
 
-def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False, kernels=None):
+def _run(
+    P: LinOp,
+    C: LinOp,
+    opts: MWUOptions,
+    pm,
+    cm,
+    trace: bool = False,
+    kernels=None,
+    axis=None,
+    init_cols=None,
+):
     """The unified driver: one ``lax.while_loop`` for jit, vmap and tracing.
 
     Masks are None-or-array at the python level (callers that need a
@@ -257,13 +285,19 @@ def _run(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool = False, kern
     installed for the duration of this trace; the public entry points
     resolve it host-side and pass it through as a jit static argument.
     Direct callers that omit it get a trace-time resolution fallback.
+
+    ``axis``/``init_cols`` are set only by :mod:`repro.dist` when the
+    variable space is slab-sharded across a mesh axis: ``axis`` names
+    the axis for the two variable-space collectives (init fallback min,
+    infeasible-direction max), ``init_cols`` is the *global* column
+    count so the init scale matches the single-device solve.
     """
     policy = kernels if kernels is not None else _kd.resolve(opts.kernel_backend)
     with _kd.use_policy(policy):
-        return _run_inner(P, C, opts, pm, cm, trace)
+        return _run_inner(P, C, opts, pm, cm, trace, axis, init_cols)
 
 
-def _run_inner(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool):
+def _run_inner(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool, axis=None, init_cols=None):
     m = P.shape[0] + C.shape[0]
     dt = jnp.promote_types(P.colmax().dtype, C.colmax().dtype)
     dt = dt if jnp.issubdtype(dt, jnp.floating) else jnp.float32
@@ -272,7 +306,7 @@ def _run_inner(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool):
     scale = (1.0 if opts.resolve_pure(P, C) else 0.5) / eta
     step_fn = STEP_RULES[opts.step_rule]
 
-    x0 = init_x(P, opts.eps, dt)
+    x0 = init_x(P, opts.eps, dt, n_cols=init_cols, axis=axis)
     carry0 = _Carry(
         x=x0,
         y=P.matvec(x0).astype(dt),
@@ -291,7 +325,7 @@ def _run_inner(P: LinOp, C: LinOp, opts: MWUOptions, pm, cm, trace: bool):
             & (carry.it < opts.max_iter)
         )
 
-    iter_body = partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, pm, cm)
+    iter_body = partial(_iteration, P, C, eta, scale, step_fn, opts.ls_tol, pm, cm, axis)
 
     if trace:
         from jax.experimental import io_callback

@@ -1,49 +1,46 @@
-"""Distributed MWU on the 2-D incidence layout (paper §5.2 on TPU mesh).
+"""DEPRECATED distributed MWU entry points — thin shims over ``repro.dist``.
 
-Implements the paper's flagship distributed workload — maximum-matching
-LP (pure packing, objective embedded as the single covering row) — with
-every vector op sharded:
+The 2-D grid-partitioned driver that used to live here (hand-rolled
+while_loop with grid-transpose collectives over a (data, model) mesh) is
+superseded by the mesh-sharded solver layer:
 
-  * x, d, g        edge-space: sharded over the full G x G grid cell
-  * y = Mx, w      vertex-space: block-sharded over "data", replicated
-                   over "model"
-  * z = <1,x>/Mb   scalar (the objective covering row), replicated
+* :class:`repro.dist.MeshPlan` + :class:`repro.dist.DistSolver` run the
+  SAME core driver (``core.mwu._run``) under ``shard_map`` with 1-D
+  edge-slab sharding and psum-completed constraint rows;
+* the legacy 2-D layout itself survives as
+  :func:`repro.sparsela.partition.partition_edges` (host-side
+  preprocessing, still covered by ``tests/test_distributed.py``).
 
-One ``shard_map`` region wraps the entire jitted ``lax.while_loop``
-solve: per MWU iteration the only communication is 2 psums + 2 grid
-transposes of (n/G)-sized blocks (the paper's O(n/sqrt p) bound) plus
-scalar psums in the line search — there is no gather of the edge space
-anywhere.
-
-Step rule: exponential + binary search (Alg. 3) with completion
-refinement, evaluated on distributed logsumexp probes.
-
-The same entry point drives (a) multi-device CPU tests (4/8 host
-devices, vs the single-device oracle), (b) the production-mesh dry-run
-('mwu-graph' cell), and (c) the Fig. 4-style scaling benchmark.
+These shims keep the old call signatures and result types alive by
+translating onto the new layer; importing this module emits one
+``DeprecationWarning`` per process. New code should use ``repro.dist``.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..sparsela.distributed import mtw_local, mx_local
 from ..sparsela.partition import Partition2D
 from ..utils.compat import shard_map
-from .mwu import Status, make_eta
+from ..utils.deprecation import warn_once
+from .mwu import MWUOptions, _run
+from .operators import Incidence, OnesRow
 
-__all__ = ["dist_matching_solve", "DistMWUResult"]
+__all__ = ["dist_matching_solve", "DistMWUResult", "make_pod_parallel_solver"]
 
-_AXES = ("data", "model")
+warn_once(
+    "core.mwu_dist",
+    "repro.core.mwu_dist is deprecated; use repro.dist (MeshPlan + DistSolver) "
+    "for mesh-sharded solves",
+)
 
 
 class DistMWUResult(NamedTuple):
-    x: jax.Array  # (G, G, e_cell) edge shards
+    x: jax.Array  # (G, G, e_cell) edge shards (legacy cell layout)
     status: jax.Array
     iters: jax.Array
     probes: jax.Array
@@ -51,265 +48,103 @@ class DistMWUResult(NamedTuple):
     max_px: jax.Array
 
 
-def _vlse(a_loc, mask_loc):
-    """Distributed logsumexp over vertex blocks (row-sharded, model-replicated)."""
-    a = jnp.where(mask_loc, a_loc, -jnp.inf)
-    m_loc = jnp.max(a)
-    m = lax.pmax(m_loc, _AXES[0])
-    m = jnp.where(jnp.isfinite(m), m, 0.0)
-    s = lax.psum(jnp.sum(jnp.exp(a - m)), _AXES[0])
-    return m + jnp.log(s), m, s
-
-
-def _local_body(G, block, n, eta, eps, inv_bound, max_iter,
-                u_loc, v_loc, emask, i_blk, ls_cap=60, sync_axis=None):
-    """Returns the per-device while-loop solve (closed over static shapes).
-
-    ``ls_cap`` bounds the line-search loops. The default 60 is a safety
-    cap; the dry-run lowers with the measured average (~8, Table 3) so
-    the roofline's while-trip accounting reflects expected cost, not the
-    worst case."""
-    vmask = (i_blk * block + jnp.arange(block)) < n  # real-vertex mask
-
-    def psum_all(s):
-        return lax.psum(s, _AXES)
-
-    def probe_psi(y_loc, dy_loc, alpha, lse_y0):
-        lse, _, _ = _vlse(eta * (y_loc + alpha * dy_loc), vmask)
-        return (lse - lse_y0) / eta
-
-    def step_search(y_loc, dy_loc, z, dz, lse_y0, alpha0):
-        """Alg. 3 on distributed probes, warm-started at the previous
-        step size (paper §4.2). Phi(a) = a*dz exactly (1 cover row)."""
-
-        def f_of(a):
-            psi = probe_psi(y_loc, dy_loc, a, lse_y0)
-            return jnp.where(psi <= 1e-30, jnp.inf, (a * dz) / jnp.maximum(psi, 1e-30))
-
-        def min_z(a):
-            return z + a * dz
-
-        one = jnp.maximum(alpha0, 1.0)
-        f1 = f_of(one)
-
-        # upward doubling
-        def up_cond(s):
-            a, f, k = s
-            return (f >= 1) & (min_z(a) < 1) & (k < ls_cap)
-
-        def up_body(s):
-            a, f, k = s
-            return a * 2, f_of(a * 2), k + 1
-
-        a_up, f_up, k_up = lax.while_loop(up_cond, up_body, (one, f1, jnp.zeros((), jnp.int32)))
-        completed_up = (f_up >= 1) & (min_z(a_up) >= 1)
-
-        # downward halving (f(1) < 1)
-        def dn_cond(s):
-            a, f, k = s
-            return (f < 1) & (a > 1e-12) & (k < ls_cap)
-
-        def dn_body(s):
-            a, f, k = s
-            return a / 2, f_of(a / 2), k + 1
-
-        a_dn, f_dn, k_dn = lax.while_loop(dn_cond, dn_body, (one, f1, jnp.zeros((), jnp.int32)))
-        need_down = f1 < 1
-        lb = jnp.where(need_down, a_dn, a_up / 2)
-        ub = jnp.where(need_down, a_dn * 2, a_up)
-
-        def bin_cond(s):
-            lb, ub, k, done = s
-            return (~done) & (ub - lb > eps * lb) & (k < ls_cap)
-
-        def bin_body(s):
-            lb, ub, k, done = s
-            beta = 0.5 * (lb + ub)
-            ok = f_of(beta) >= 1
-            done = ok & (min_z(beta) >= 1)
-            return jnp.where(ok, beta, lb), jnp.where(ok, ub, beta), k + 1, done
-
-        lb, ub, k_bin, _ = lax.while_loop(
-            bin_cond, bin_body, (lb, ub, jnp.zeros((), jnp.int32), completed_up)
-        )
-        alpha = jnp.where(completed_up, a_up, lb)
-
-        # completion refinement: smallest alpha with z + alpha dz >= 1
-        completes = min_z(alpha) >= 1
-
-        def ref_cond(s):
-            lo, hi, k = s
-            return (hi - lo > eps * hi) & (k < ls_cap)
-
-        def ref_body(s):
-            lo, hi, k = s
-            mid = 0.5 * (lo + hi)
-            ok = min_z(mid) >= 1
-            return jnp.where(ok, lo, mid), jnp.where(ok, mid, hi), k + 1
-
-        lo, hi, k_ref = lax.while_loop(
-            ref_cond, ref_body, (jnp.zeros_like(alpha), alpha, jnp.zeros((), jnp.int32))
-        )
-        alpha = jnp.where(completes, jnp.maximum(hi, 1.0), alpha)
-        probes = k_up + k_dn + k_bin + k_ref
-        return alpha, probes, completes
-
-    def body(carry):
-        x_loc, y_loc, z, it, probes, status, alpha_prev = carry
-        # lockstep guard: when another pod is still solving, finished
-        # pods keep executing (collective counts must stay aligned in a
-        # single SPMD program) but freeze their own state.
-        frozen = (status != Status.RUNNING) | (z >= 1.0)
-        # packing weights w = softmax(eta y) over real vertices
-        lse_y, m, s_loc = _vlse(eta * y_loc, vmask)
-        w_loc = jnp.where(vmask, jnp.exp(eta * y_loc - lse_y), 0.0)
-        # g = M^T w (edge shards); h = inv_bound (objective row)
-        g_loc = mtw_local(u_loc, v_loc, emask, w_loc, G, _AXES)
-        ratio = g_loc / inv_bound
-        d_loc = (1.0 / eta) * jnp.maximum(0.0, 1.0 - ratio) * x_loc  # pure: 1/eta
-        d_loc = jnp.where(emask, d_loc, 0.0)
-        max_d = lax.pmax(jnp.max(d_loc), _AXES)
-        infeasible_dir = max_d <= 0
-
-        dy_loc = mx_local(u_loc, v_loc, emask, d_loc, block, G, _AXES)
-        dz = psum_all(jnp.sum(d_loc)) * inv_bound
-
-        alpha, k, completes = step_search(y_loc, dy_loc, z, dz, lse_y, alpha_prev)
-        infeasible_alpha = alpha < 1
-        bad = infeasible_dir | infeasible_alpha
-        aa = jnp.where(bad, 0.0, alpha)
-        x2 = x_loc + aa * d_loc
-        y2 = y_loc + aa * dy_loc
-        z2 = z + aa * dz
-        new_status = jnp.where(bad, jnp.int32(Status.INFEASIBLE), jnp.int32(Status.RUNNING))
-        ap2 = jnp.where(bad, alpha_prev, alpha)
-        # freeze finished pods
-        fz = lambda old, new: jnp.where(frozen, old, new)
-        return (fz(x_loc, x2), fz(y_loc, y2), fz(z, z2), fz(it, it + 1),
-                fz(probes, probes + k), fz(status, new_status), fz(alpha_prev, ap2))
-
-    def cond(carry):
-        x_loc, y_loc, z, it, probes, status, alpha_prev = carry
-        run = (status == Status.RUNNING) & (z < 1.0) & (it < max_iter)
-        if sync_axis is not None:
-            # continue while ANY pod is running (lockstep across pods)
-            run = lax.pmax(run.astype(jnp.int32), sync_axis) > 0
-        return run
-
-    return cond, body, vmask
-
-
-def _dist_solve_local(G, block, n, eta, eps, inv_bound, max_iter,
-                      u_loc, v_loc, emask, x0_loc, ls_cap=60, sync_axis=None):
-    i_blk = lax.axis_index(_AXES[0])
-    cond, body, vmask = _local_body(
-        G, block, n, eta, eps, inv_bound, max_iter, u_loc, v_loc, emask, i_blk,
-        ls_cap, sync_axis,
-    )
-    y0 = mx_local(u_loc, v_loc, emask, x0_loc, block, G, _AXES)
-    z0 = lax.psum(jnp.sum(jnp.where(emask, x0_loc, 0.0)), _AXES) * inv_bound
-    carry = (
-        x0_loc, y0, z0,
-        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-        jnp.int32(Status.RUNNING), jnp.ones((), jnp.float32),
-    )
-    x, y, z, it, probes, status, _ = lax.while_loop(cond, body, carry)
-    covered = z >= 1.0
-    max_px = lax.pmax(jnp.max(jnp.where(vmask, y, -jnp.inf)), _AXES[0])
-    packed = max_px <= 1.0 + eps + 1e-9
-    final = jnp.where(
-        status == Status.INFEASIBLE,
-        jnp.int32(Status.INFEASIBLE),
-        jnp.where(covered & packed, jnp.int32(Status.FEASIBLE), jnp.int32(Status.ITER_LIMIT)),
-    )
-    obj = lax.psum(jnp.sum(jnp.where(emask, x, 0.0)), _AXES)
-    return x, final, it, probes, obj, max_px
+def _flatten_partition(part: Partition2D):
+    """Cell layout -> global edge list + the cell indices to scatter back."""
+    mask = np.asarray(part.mask)
+    i_idx, j_idx, k_idx = np.nonzero(mask)
+    u = np.asarray(part.u_loc)[i_idx, j_idx, k_idx] + i_idx * part.block
+    v = np.asarray(part.v_loc)[i_idx, j_idx, k_idx] + j_idx * part.block
+    return u.astype(np.int32), v.astype(np.int32), (i_idx, j_idx, k_idx)
 
 
 def dist_matching_solve(part: Partition2D, n_vertices: int, bound: float,
                         mesh, eps: float = 0.1, max_iter: int = 5000):
     """Feasibility solve: exists x >= 0 with Mx <= 1, <1,x> >= bound.
 
-    Returns DistMWUResult. Feasible => a matching LP objective >= bound
-    is achievable (binary-search driver in benchmarks/examples).
+    Deprecated shim: flattens the legacy 2-D cell partition back into a
+    global edge list and runs :class:`repro.dist.DistSolver` with an
+    edge-slab pod plan over all of ``mesh``'s devices. The result keeps
+    the old (G, G, e_cell) x layout.
     """
-    G = part.grid
-    m_rows = n_vertices + 1
-    eta = jnp.asarray(make_eta(m_rows, eps), jnp.float32)
-    inv_bound = jnp.asarray(1.0 / bound, jnp.float32)
-    # init x = eps / (m_cols * colmax) with colmax=1 for incidence
-    n_edges_pad = G * G * part.e_cell
-    x0_val = eps / float(part.mask.sum())
+    from ..api.problem import Problem
+    from ..dist import DistSolver, MeshPlan
 
-    local = functools.partial(
-        _dist_solve_local, G, part.block, n_vertices, eta, eps, inv_bound, max_iter
+    u, v, cell_idx = _flatten_partition(part)
+    prob = Problem(
+        name="match",
+        kind="packing",
+        sense="max",
+        bound_mode="objective_covering",
+        P=Incidence(u=jnp.asarray(u), v=jnp.asarray(v), n_vertices=int(n_vertices)),
+        c=jnp.ones((u.shape[0],), jnp.float32),
+        lo=1.0,
+        hi=float(bound),
+        n_vars=int(u.shape[0]),
+        nnz=2 * int(u.shape[0]),
     )
-
-    # shard_map local shards arrive as (1, 1, e_cell); squeeze inside.
-    def wrapper(u, v, msk, x0):
-        def inner(u, v, msk, x0):
-            out = local(u[0, 0], v[0, 0], msk[0, 0], x0[0, 0])
-            x, *rest = out
-            return (x[None, None], *rest)
-
-        return shard_map(
-            inner,
-            mesh=mesh,
-            in_specs=(P("data", "model", None),) * 4,
-            out_specs=(P("data", "model", None), P(), P(), P(), P(), P()),
-            # the grid transpose provably re-replicates values over the
-            # model axis (see module docstring), which the static vma
-            # checker cannot express — replication is asserted by tests.
-            check_vma=False,
-        )(u, v, msk, x0)
-
-    u = jnp.asarray(part.u_loc)
-    v = jnp.asarray(part.v_loc)
-    msk = jnp.asarray(part.mask)
-    x0 = jnp.where(msk, jnp.float32(x0_val), 0.0)
-    with mesh:
-        x, status, it, probes, obj, max_px = jax.jit(wrapper)(u, v, msk, x0)
+    n_devices = int(np.asarray(mesh.devices).size) if mesh is not None else 1
+    solver = DistSolver(
+        MWUOptions(eps=eps, step_rule="binary", max_iter=max_iter),
+        plan=MeshPlan(pod=n_devices, data=1),
+    )
+    res = solver.feasible(prob, float(bound))
+    x_flat = np.asarray(res.x)
+    x_cells = np.zeros((part.grid, part.grid, part.e_cell), x_flat.dtype)
+    x_cells[cell_idx] = x_flat
     return DistMWUResult(
-        x=x, status=status, iters=it, probes=probes, objective=obj, max_px=max_px
+        x=jnp.asarray(x_cells),
+        status=res.status,
+        iters=res.iters,
+        probes=res.ls_probes,
+        objective=jnp.asarray(x_flat.sum()),
+        max_px=res.max_px,
     )
 
 
 def make_pod_parallel_solver(mesh, G: int, block: int, n_vertices: int,
                              n_edges: int, eps: float = 0.1, max_iter: int = 5000,
                              ls_cap: int = 60):
-    """Pod-parallel bound search (beyond-paper, DESIGN.md §5).
+    """Pod-parallel bound search (beyond-paper, DESIGN.md §5). Deprecated.
 
-    The binary search over the objective bound M is a sequence of
-    *independent* feasibility solves; on a (pod, data, model) mesh each
-    pod tests a different bound concurrently — the edge partition is
-    replicated across pods, ``bounds`` is sharded over "pod", and the
-    grid collectives (named data/model axes only) stay pod-local.
+    Returns a jittable ``fn(bounds (n_pod,), u, v, mask) -> (status,
+    iters, objective, max_px)``, each ``(n_pod,)``: every pod tests a
+    different bound concurrently. The shim reassembles the legacy
+    (G, G, e_cell) cell shards into a global edge list IN-graph (the
+    inputs are replicated across the pod's data/model axes) and runs the
+    unified core driver per pod — no cross-pod collectives, so pods
+    finish independently. ``ls_cap`` is accepted for signature
+    compatibility; the core step rules carry their own probe caps.
 
-    Returns a jittable fn(bounds (n_pod,), u, v, mask) ->
-    (status (n_pod,), iters, objective, max_px).
+    New code: ``repro.dist.DistSolver.solve_batch`` with a ``data``-axis
+    plan does the same fan-out over any problem family.
     """
-    m_rows = n_vertices + 1
-    eta = jnp.asarray(make_eta(m_rows, eps), jnp.float32)
-    x0_val = jnp.float32(eps / max(n_edges, 1))
+    del ls_cap  # legacy knob of the hand-rolled line search
+    n_pad = G * block
+    opts = MWUOptions(eps=eps, step_rule="binary", max_iter=max_iter)
+    p_mask = jnp.arange(n_pad) < n_vertices  # padded vertex rows stay out of smax
 
     def inner(bound_loc, u, v, msk):
-        u, v, msk = u[0, 0], v[0, 0], msk[0, 0]
-        inv_bound = 1.0 / bound_loc[0]
-        x0 = jnp.where(msk, x0_val, 0.0)
-        x, status, it, probes, obj, max_px = _dist_solve_local(
-            G, block, n_vertices, eta, eps, inv_bound, max_iter, u, v, msk, x0,
-            ls_cap=ls_cap, sync_axis="pod",
+        u_g = (u + jnp.arange(G, dtype=u.dtype)[:, None, None] * block).reshape(-1)
+        v_g = (v + jnp.arange(G, dtype=v.dtype)[None, :, None] * block).reshape(-1)
+        em = msk.reshape(-1)
+        P_op = Incidence(u=u_g, v=v_g, n_vertices=n_pad, edge_mask=em)
+        C_op = OnesRow(
+            c=jnp.where(em, 1.0, 0.0).astype(jnp.float32),
+            inv_bound=(1.0 / bound_loc[0]).astype(jnp.float32),
         )
-        one = lambda s: s[None]
-        return one(status), one(it), one(obj), one(max_px)
+        res = _run(P_op, C_op, opts, p_mask, None)
+        obj = jnp.sum(jnp.where(em, res.x, 0.0))
+        return res.status[None], res.iters[None], obj[None], res.max_px[None]
 
     def fn(bounds, u, v, msk):
         return shard_map(
             inner,
             mesh=mesh,
-            in_specs=(P("pod"), P("data", "model", None), P("data", "model", None),
-                      P("data", "model", None)),
+            in_specs=(P("pod"), P(), P(), P()),
             out_specs=(P("pod"),) * 4,
+            # per-pod results are replicated over the pod's own data/model
+            # axes (inputs replicated, no collectives in the body) — not
+            # expressible to the static rep checker.
             check_vma=False,
         )(bounds, u, v, msk)
 

@@ -1,0 +1,33 @@
+"""repro.dist — mesh-sharded distributed solver layer (paper §5).
+
+The distributed translation of the paper's MPI scheme onto jax SPMD:
+
+* :class:`MeshPlan` — host-side (pod, data) mesh description, resolved
+  into a concrete device mesh exactly like ``kernels.dispatch`` resolves
+  a ``KernelPolicy`` (frozen, hashable, jit-cache-safe).
+* :mod:`repro.dist.shard` — ``PartitionSpec`` layouts for ``Problem``
+  pytrees plus the :class:`PodSum` / :class:`SlabCols` operator wrappers
+  that psum-complete the constraint-space coupling.
+* :class:`DistSolver` — ``repro.api.Solver`` with its feasibility
+  primitives wrapped in ``shard_map``; bit-identical on ``MeshPlan()``,
+  edge-slab-parallel on pod-sharded plans.
+
+``repro.lpserve`` accepts a ``MeshPlan`` in its config to shard lane
+slots across the mesh; ``core.mwu_dist`` is the deprecated predecessor
+kept as a shim over this package.
+"""
+from .mesh import DATA_AXIS, POD_AXIS, MeshPlan
+from .shard import PodSum, SlabCols, pod_mode, problem_specs, slab_pad_problem
+from .solver import DistSolver
+
+__all__ = [
+    "MeshPlan",
+    "POD_AXIS",
+    "DATA_AXIS",
+    "DistSolver",
+    "PodSum",
+    "SlabCols",
+    "pod_mode",
+    "problem_specs",
+    "slab_pad_problem",
+]

@@ -9,7 +9,6 @@ from .graph import Graph
 from .generators import bipartite_ratings, erdos, grid2d, kron, rgg
 from .problems import (
     PROBLEMS,
-    ProblemLP,
     bmatching_lp,
     build,
     densest_subgraph_lp,
@@ -19,6 +18,17 @@ from .problems import (
     matching_lp,
     vcover_lp,
 )
+
+
+def __getattr__(name):
+    # deprecated re-exports resolve lazily so importing repro.graphs
+    # stays warning-free; the warning fires on first actual use.
+    if name == "ProblemLP":
+        from . import problems
+
+        return problems.ProblemLP
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "Graph",

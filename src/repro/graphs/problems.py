@@ -44,8 +44,15 @@ __all__ = ["ProblemLP", "matching_lp", "bmatching_lp", "vcover_lp", "domset_lp",
 
 # Deprecated alias: the old ProblemLP closure bundle is gone; builders
 # return declarative repro.api.Problem specs and .solve delegates to the
-# unified Solver facade.
-ProblemLP = Problem
+# unified Solver facade. Lazy (PEP 562) so the one-per-process
+# DeprecationWarning fires only on actual use.
+def __getattr__(name):
+    if name == "ProblemLP":
+        from ..utils.deprecation import warn_once
+
+        warn_once("ProblemLP", "ProblemLP is deprecated; use repro.api.Problem")
+        return Problem
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def matching_lp(g: Graph, name="match") -> Problem:

@@ -12,13 +12,25 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh", "sharding_for"]
 
 
-def _make_mesh(shape, axes):
+def _make_mesh(shape, axes, devices=None):
     """jax.make_mesh across jax versions.
 
     ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer
     jax; older releases default every axis to Auto anyway, so omitting
     the kwarg is semantically identical there.
+
+    ``devices`` selects an explicit device subset (e.g. the first
+    ``pod * data`` of ``jax.devices()`` for a :class:`repro.dist.MeshPlan`
+    smaller than the host); ``jax.make_mesh`` has no stable cross-version
+    spelling for that, so a subset goes through ``jax.sharding.Mesh``
+    directly (fine on host/CPU devices — the perf-aware reordering
+    ``jax.make_mesh`` adds only matters on real TPU topologies).
     """
+    if devices is not None:
+        import numpy as np
+
+        devs = np.asarray(devices, dtype=object).reshape(tuple(shape))
+        return jax.sharding.Mesh(devs, tuple(axes))
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is None:
         return jax.make_mesh(tuple(shape), tuple(axes))
@@ -34,9 +46,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """Arbitrary mesh (tests use (1,1) / (2,2) / (2,4) host-device meshes)."""
-    return _make_mesh(shape, axes)
+    return _make_mesh(shape, axes, devices)
 
 
 def sharding_for(mesh, spec_tree):

@@ -43,6 +43,8 @@ from ..api.solver import (
     stack_problems,
 )
 from ..core.mwu import MWUOptions, MWUResult, Status
+from ..dist.mesh import MeshPlan
+from ..dist.solver import DistSolver
 from .bucketing import BucketPolicy, BucketSpec, pad_problem, problem_dims
 from .stats import BucketStats, aggregate
 
@@ -51,7 +53,13 @@ __all__ = ["LPServeConfig", "LPEngine", "BoundSearch"]
 
 @dataclass(frozen=True)
 class LPServeConfig:
-    """Engine knobs (frozen so a config can key caches/logs)."""
+    """Engine knobs (frozen so a config can key caches/logs).
+
+    ``mesh`` (a :class:`repro.dist.MeshPlan`, optional) shards each
+    dispatch across the device mesh: lane slots fan out over the
+    ``data`` axis and each lane's variable space slabs over ``pod``.
+    ``None`` keeps the single-device ``Solver`` path bit-for-bit.
+    """
 
     opts: MWUOptions = field(default_factory=MWUOptions)
     lanes: int = 8  # batch slots per dispatch key
@@ -59,10 +67,16 @@ class LPServeConfig:
     rel_tol: float | None = None  # bound-search granularity (default eps/2)
     max_calls: int = 64  # per-request feasibility budget
     pad_lanes: bool = True  # always launch the full slot count (shape-static)
+    mesh: MeshPlan | None = None  # shard lane slots across this mesh
 
     def __post_init__(self):
         if self.lanes < 1:
             raise ValueError("lanes must be >= 1")
+        if self.mesh is not None and self.lanes % self.mesh.data != 0:
+            raise ValueError(
+                f"lanes ({self.lanes}) must be a multiple of the mesh data "
+                f"axis ({self.mesh.data}) so lane slots shard evenly"
+            )
 
 
 class BoundSearch:
@@ -209,7 +223,15 @@ class LPEngine:
 
     def __init__(self, config: LPServeConfig | None = None):
         self.cfg = config if config is not None else LPServeConfig()
-        self.solver = Solver(self.cfg.opts, batch_width=1, max_calls=self.cfg.max_calls)
+        if self.cfg.mesh is not None:
+            self.solver: Solver = DistSolver(
+                self.cfg.opts,
+                plan=self.cfg.mesh,
+                batch_width=1,
+                max_calls=self.cfg.max_calls,
+            )
+        else:
+            self.solver = Solver(self.cfg.opts, batch_width=1, max_calls=self.cfg.max_calls)
         self.rel_tol = (
             self.cfg.rel_tol if self.cfg.rel_tol is not None else self.cfg.opts.eps / 2
         )
@@ -287,7 +309,9 @@ class LPEngine:
             self._dispatch_key(lanes[0][0].problem, state.bucket),
             len(lanes),
         )
-        cache0 = _jit_cache_size()
+        # mesh-sharded launches go through repro.dist's own callable
+        # cache, not _feasibility_batch's — use the shape-key heuristic.
+        cache0 = _jit_cache_size() if self.cfg.mesh is None else None
 
         stacked = stack_problems([req.padded for req, _ in lanes])
         bounds = jnp.asarray([b for _, b in lanes])
@@ -296,7 +320,7 @@ class LPEngine:
         jax.block_until_ready(batch.x)
         dt = time.perf_counter() - t0
 
-        cache1 = _jit_cache_size()
+        cache1 = _jit_cache_size() if self.cfg.mesh is None else None
         if cache0 is not None and cache1 is not None:
             hit = cache1 == cache0
         else:
@@ -343,5 +367,25 @@ class LPEngine:
         return self._done.get(rid)
 
     def stats(self) -> dict:
-        """Aggregated serving counters (see :mod:`repro.lpserve.stats`)."""
-        return aggregate(s.stats for s in self._buckets.values())
+        """Aggregated serving counters (see :mod:`repro.lpserve.stats`).
+
+        With a mesh-sharded config the dict gains a ``"mesh"`` section:
+        the plan shape, per-device lane occupancy (lane rounds divided
+        across the ``data`` axis), and the distributed solver's launch /
+        psum-round counters.
+        """
+        out = aggregate(s.stats for s in self._buckets.values())
+        plan = self.cfg.mesh
+        if plan is not None:
+            lane_rounds = sum(s.stats.lane_rounds for s in self._buckets.values())
+            ds = dict(self.solver.dist_stats)
+            out["mesh"] = {
+                "pod": plan.pod,
+                "data": plan.data,
+                "devices": plan.n_devices,
+                "lanes_per_device": self.cfg.lanes // plan.data,
+                "lane_rounds_per_device": lane_rounds // plan.data,
+                "dist_launches": ds["launches"],
+                "psum_rounds": ds["psum_rounds"],
+            }
+        return out

@@ -21,7 +21,30 @@ import numpy as np
 
 from ..graphs.graph import Graph
 
-__all__ = ["Partition2D", "partition_edges"]
+__all__ = ["Partition2D", "partition_edges", "partition_edges_1d"]
+
+
+def partition_edges_1d(n_edges: int, parts: int) -> tuple[int, int]:
+    """1-D contiguous edge-slab split (the ``repro.dist`` pod layout).
+
+    Where :func:`partition_edges` builds the paper's 2-D grid layout
+    (block-local endpoint ids, per-cell padding) for the legacy
+    ``core.mwu_dist`` driver, the mesh-sharded solver keeps *global*
+    endpoint ids and simply slabs the edge dimension across the ``pod``
+    axis: device k owns edges ``[k * slab, (k + 1) * slab)`` of the
+    (end-padded) edge list, and the vertex-space coupling is completed
+    by one ``psum`` per matvec instead of grid transposes.
+
+    Returns ``(padded_edge_count, slab_width)`` with
+    ``padded_edge_count == parts * slab_width`` and
+    ``slab_width == ceil(n_edges / parts)``; padding (masked edges)
+    is appended at the global end, so a solution over the padded edge
+    list strips back to the original with ``x[:n_edges]``.
+    """
+    parts = max(int(parts), 1)
+    n_edges = max(int(n_edges), 1)
+    slab = -(-n_edges // parts)
+    return parts * slab, slab
 
 
 @dataclass

@@ -6,22 +6,73 @@ here so call sites stay clean.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 __all__ = ["shard_map"]
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+    check_rep: bool | None = None,
+    axis_names=None,
+    auto=None,
+):
     """``jax.shard_map`` across jax versions.
 
-    Newer jax exposes it as ``jax.shard_map`` with a ``check_vma``
-    flag; older releases only have ``jax.experimental.shard_map`` whose
-    equivalent flag is ``check_rep``.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
-        )
-    from jax.experimental.shard_map import shard_map as _legacy
+    Newer jax exposes it as ``jax.shard_map`` with a ``check_vma`` flag
+    and an ``axis_names`` manual-axes set; older releases only have
+    ``jax.experimental.shard_map.shard_map`` whose equivalents are
+    ``check_rep`` and ``auto`` (the *complement*: axes shard_map may
+    auto-shard over). Both spellings are accepted here and translated to
+    whatever the installed jax understands, so callers never drop a
+    kwarg on the fallback branch:
 
-    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma)
+    * ``check_rep`` is an alias for ``check_vma`` (the old name wins
+      when both are given, matching legacy call sites).
+    * ``axis_names`` (manual axes) and ``auto`` (automatic axes) are
+      complements over ``mesh.axis_names``; whichever one the target
+      signature lacks is derived from the other via the mesh.
+    """
+    if check_rep is not None:
+        check_vma = check_rep
+
+    if hasattr(jax, "shard_map"):
+        target = jax.shard_map
+        kwargs = {"check_vma": check_vma}
+    else:
+        from jax.experimental.shard_map import shard_map as target
+
+        kwargs = {"check_rep": check_vma}
+
+    params = inspect.signature(target).parameters
+    if "check_vma" not in params and "check_vma" in kwargs:
+        kwargs = {"check_rep": kwargs.pop("check_vma")}
+    if "check_rep" not in params and "check_rep" in kwargs:
+        kwargs = {"check_vma": kwargs.pop("check_rep")}
+
+    mesh_axes = tuple(getattr(mesh, "axis_names", ()))
+    if axis_names is None and auto is not None:
+        axis_names = frozenset(mesh_axes) - frozenset(auto)
+    if auto is None and axis_names is not None:
+        auto = frozenset(mesh_axes) - frozenset(axis_names)
+    # Only pass the manual/auto split when the caller asked for one AND
+    # the target can express it; a full-manual default needs no kwarg.
+    if axis_names is not None and frozenset(axis_names) != frozenset(mesh_axes):
+        if "axis_names" in params:
+            kwargs["axis_names"] = frozenset(axis_names)
+        elif "auto" in params:
+            kwargs["auto"] = frozenset(auto)
+        else:
+            raise TypeError(
+                "this jax version's shard_map supports neither 'axis_names' "
+                "nor 'auto'; cannot request a partial-manual region"
+            )
+
+    return target(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -1,0 +1,23 @@
+"""Once-per-process deprecation warnings for the legacy shims.
+
+Every deprecated surface (``core.solve`` re-exports, the
+``core.feasibility`` drivers, ``ProblemLP``, ``core.mwu_dist``) funnels
+through :func:`warn_once` so a long-running process — a serving engine,
+a benchmark sweep — sees exactly one ``DeprecationWarning`` per shim,
+not one per call.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["warn_once"]
+
+_WARNED: set[str] = set()
+
+
+def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning(message)`` the first time ``key`` is seen."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
