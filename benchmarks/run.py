@@ -10,6 +10,10 @@
   serving bench_serving      lpserve continuous batching vs sequential
   kernels bench_kernels      pallas kernel pack vs XLA, per op + solve
                              (writes BENCH_kernels.json at the repo root)
+  tracecheck repro.tracecheck static jaxpr/HLO lint of the benched entry
+                             points — the same family x backend x plan
+                             matrix the CI gate sweeps (writes
+                             TRACECHECK.json at the repo root)
 
 ``python -m benchmarks.run [section ...] [--quick]`` — default: all.
 ``--quick`` shrinks the kernels and fig4 sections to CI-smoke sizes. The solver
@@ -24,6 +28,7 @@ from pathlib import Path
 
 ALL_SECTIONS = [
     "table2", "table3", "fig3", "fig5", "fig4", "roofline", "serving", "kernels",
+    "tracecheck",
 ]
 
 
@@ -78,6 +83,17 @@ def main() -> None:
             out = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
             out.write_text(json.dumps(records, indent=2) + "\n")
             print(f"wrote {out}", flush=True)
+        elif s == "tracecheck":
+            # the bench driver lints exactly the matrix the CI gate
+            # sweeps (repro.tracecheck.matrix.default_matrix) — the
+            # benched configurations and the linted ones cannot drift.
+            from repro.tracecheck.cli import run_matrix
+
+            out = Path(__file__).resolve().parents[1] / "TRACECHECK.json"
+            report = run_matrix(quick=quick, out=str(out))
+            print(f"wrote {out}", flush=True)
+            if not report["ok"]:
+                sys.exit(1)
         else:
             print(f"unknown section {s}")
         print(f"[{s}: {time.perf_counter()-t0:.1f}s]", flush=True)

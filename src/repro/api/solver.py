@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import mwu as _mwu
 from ..core.mwu import MWUOptions, MWUResult, Status, _run, solve, solve_traced
 from ..kernels import dispatch as _kd
 from .problem import Problem
@@ -201,6 +202,39 @@ class Solver:
         return _feasibility_batch(
             problem, bounds, self.opts, 0 if batched_problem else None, kernels=kernels
         )
+
+    # -- AOT inspection hooks (repro.tracecheck) -----------------------
+    # Same jit entries / statics / host-side resolution as the executing
+    # paths above, so the linted program is the program a call would run.
+    def lower_feasible(self, problem: Problem, bound=None, *, trace: bool = False):
+        """AOT-lower one :meth:`feasible` call (``jax.stages.Lowered``)."""
+        P, C, pm, cm = problem.instantiate(bound)
+        return _mwu.lower(P, C, self.opts, p_mask=pm, c_mask=cm, trace=trace)
+
+    def jaxpr_feasible(self, problem: Problem, bound=None, *, trace: bool = False):
+        """ClosedJaxpr of one :meth:`feasible` call (primitive-level view)."""
+        P, C, pm, cm = problem.instantiate(bound)
+        return _mwu.solve_jaxpr(P, C, self.opts, p_mask=pm, c_mask=cm, trace=trace)
+
+    def lower_batch(self, problem: Problem, bounds, *, batched_problem: bool = False):
+        """AOT-lower one :meth:`solve_batch` call without executing it."""
+        bounds = jnp.atleast_1d(jnp.asarray(bounds))
+        kernels = _kd.resolve(self.opts.kernel_backend)
+        return _feasibility_batch.lower(
+            problem, bounds, self.opts, 0 if batched_problem else None, kernels=kernels
+        )
+
+    def jaxpr_batch(self, problem: Problem, bounds, *, batched_problem: bool = False):
+        """ClosedJaxpr of one :meth:`solve_batch` call."""
+        bounds = jnp.atleast_1d(jnp.asarray(bounds))
+        kernels = _kd.resolve(self.opts.kernel_backend)
+        axis = 0 if batched_problem else None
+        fn = _feasibility_batch.__wrapped__
+
+        def call(p, b):
+            return fn(p, b, self.opts, axis, kernels=kernels)
+
+        return jax.make_jaxpr(call)(problem, bounds)
 
     # -- the unified optimization driver ------------------------------
     def solve(self, problem: Problem, *, trace: bool = False) -> Solution:

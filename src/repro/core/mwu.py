@@ -51,7 +51,17 @@ from .operators import LinOp
 from .smoothing import smax_and_weights, smin_and_weights
 from .stepsize import STEP_RULES, StepSizeResult
 
-__all__ = ["MWUOptions", "MWUResult", "Status", "solve", "solve_traced", "init_x", "make_eta"]
+__all__ = [
+    "MWUOptions",
+    "MWUResult",
+    "Status",
+    "solve",
+    "solve_traced",
+    "lower",
+    "solve_jaxpr",
+    "init_x",
+    "make_eta",
+]
 
 
 class Status:
@@ -353,17 +363,58 @@ def _solve_impl(P, C, opts: MWUOptions, p_mask, c_mask, has_p_mask, has_c_mask, 
     return _run(P, C, opts, pm, cm, trace=trace, kernels=kernels)
 
 
-def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None) -> MWUResult:
-    """Solve the feasibility LP  P x <= 1, C x >= 1, x >= 0  (fully jitted)."""
-    # Pass dummies for masks so the jit signature stays pytree-stable.
+def _mask_args(P, C, p_mask, c_mask):
+    """Dummy-mask plumbing shared by solve / solve_traced / lower.
+
+    Masks are passed as dummies when absent so the jit signature stays
+    pytree-stable; the has_* statics select whether they are real.
+    """
     hp, hc = p_mask is not None, c_mask is not None
     pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
     cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
+    return pm, cmk, hp, hc
+
+
+def solve(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None) -> MWUResult:
+    """Solve the feasibility LP  P x <= 1, C x >= 1, x >= 0  (fully jitted)."""
+    pm, cmk, hp, hc = _mask_args(P, C, p_mask, c_mask)
     # Resolve the kernel backend OUTSIDE the jit: the concrete policy is
     # part of the cache key, so a device switch re-resolves instead of
     # serving a stale trace-time jax.default_backend() read.
     kernels = _kd.resolve(opts.kernel_backend)
     return _solve_impl(P, C, opts, pm, cmk, hp, hc, kernels=kernels)
+
+
+def lower(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None, trace=False):
+    """AOT-lower :func:`solve` without executing it (``jax.stages.Lowered``).
+
+    Same jit entry, statics and dummy-mask plumbing as :func:`solve`, so
+    what ``repro.tracecheck`` lints is byte-for-byte the program a real
+    call would run. ``.compile().as_text()`` gives the optimized HLO.
+    """
+    pm, cmk, hp, hc = _mask_args(P, C, p_mask, c_mask)
+    kernels = _kd.resolve(opts.kernel_backend)
+    return _solve_impl.lower(P, C, opts, pm, cmk, hp, hc, trace=trace, kernels=kernels)
+
+
+def solve_jaxpr(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None, trace=False):
+    """The ClosedJaxpr of the solve body (pre-compilation primitive view).
+
+    Traces :func:`_run` directly (under the resolved kernel policy) so
+    ``pallas_call`` / collective / callback primitives stay visible —
+    the form the jaxpr-level tracecheck rules inspect.
+    """
+    pm, cmk, hp, hc = _mask_args(P, C, p_mask, c_mask)
+    kernels = _kd.resolve(opts.kernel_backend)
+
+    def fn(P, C, pm, cmk):
+        return _run(
+            P, C, opts,
+            pm if hp else None, cmk if hc else None,
+            trace=trace, kernels=kernels,
+        )
+
+    return jax.make_jaxpr(fn)(P, C, pm, cmk)
 
 
 def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=None, c_mask=None):
@@ -376,9 +427,7 @@ def solve_traced(P: LinOp, C: LinOp, opts: MWUOptions = MWUOptions(), p_mask=Non
     state when the loop exits before the iteration cap), ``alpha``,
     ``probes``.
     """
-    hp, hc = p_mask is not None, c_mask is not None
-    pm = p_mask if hp else jnp.zeros((P.shape[0],), bool)
-    cmk = c_mask if hc else jnp.zeros((C.shape[0],), bool)
+    pm, cmk, hp, hc = _mask_args(P, C, p_mask, c_mask)
     kernels = _kd.resolve(opts.kernel_backend)
     _TRACE.rows = []
     try:

@@ -126,14 +126,14 @@ class DistSolver(Solver):
         }
 
     # -- feasibility primitives (everything else is inherited) ---------
-    def solve_batch(self, problem, bounds, *, batched_problem: bool = False):
-        """Batched feasibility fanned out over the (pod, data) mesh.
+    def _prepare_launch(self, problem, bounds, batched_problem: bool) -> dict:
+        """Host-side launch prep shared by execution and AOT inspection.
 
-        Same contract as ``Solver.solve_batch``: returns an ``MWUResult``
-        with leading dim ``len(bounds)``. Lanes shard over ``data`` (the
-        lane count is padded host-side to a multiple of the axis by
-        repeating the last lane; padding is stripped before returning),
-        each lane's variable space shards over ``pod``.
+        Everything up to (but excluding) running the jitted shard_map
+        program: pod-mode detection, slab/lane padding, the no-vmap
+        decision, kernel-policy resolution, and the callable-cache
+        lookup. Returns the padded operands plus the cached callable and
+        the static facts (mode, ncols, B) the caller needs afterwards.
         """
         plan = self.plan
         bounds = jnp.atleast_1d(jnp.asarray(bounds))
@@ -183,6 +183,39 @@ class DistSolver(Solver):
                 plan, self.opts, kernels, mode, ncols, block, batched_problem, no_vmap, specs
             )
             _CALLABLE_CACHE[key] = fn
+        return {
+            "problem": problem,
+            "bounds": bounds,
+            "fn": fn,
+            "mode": mode,
+            "ncols": ncols,
+            "B": B,
+            "no_vmap": no_vmap,
+        }
+
+    # -- AOT inspection hooks (repro.tracecheck) -----------------------
+    def lower_batch(self, problem, bounds, *, batched_problem: bool = False):
+        """AOT-lower the mesh-sharded launch this ``solve_batch`` would run."""
+        launch = self._prepare_launch(problem, bounds, batched_problem)
+        return launch["fn"].lower(launch["problem"], launch["bounds"])
+
+    def jaxpr_batch(self, problem, bounds, *, batched_problem: bool = False):
+        """ClosedJaxpr of the mesh-sharded launch (shard_map body visible)."""
+        launch = self._prepare_launch(problem, bounds, batched_problem)
+        return jax.make_jaxpr(launch["fn"])(launch["problem"], launch["bounds"])
+
+    def solve_batch(self, problem, bounds, *, batched_problem: bool = False):
+        """Batched feasibility fanned out over the (pod, data) mesh.
+
+        Same contract as ``Solver.solve_batch``: returns an ``MWUResult``
+        with leading dim ``len(bounds)``. Lanes shard over ``data`` (the
+        lane count is padded host-side to a multiple of the axis by
+        repeating the last lane; padding is stripped before returning),
+        each lane's variable space shards over ``pod``.
+        """
+        launch = self._prepare_launch(problem, bounds, batched_problem)
+        problem, bounds, fn = launch["problem"], launch["bounds"], launch["fn"]
+        plan, B, ncols = self.plan, launch["B"], launch["ncols"]
 
         res = fn(problem, bounds)
         res = jax.tree.map(lambda a: a[:B], res)

@@ -58,6 +58,9 @@ __all__ = [
     "BACKENDS",
     "ENV_VAR",
     "VMEM_VERTEX_LIMIT",
+    "VMEM_BYTES_PER_CORE",
+    "VMEM_HEADROOM_BYTES",
+    "vmem_budget_bytes",
     "vmem_vertex_limit",
     "resolve",
     "resolve_impl",
@@ -81,6 +84,18 @@ BACKENDS = ("auto", "pallas", "xla")
 # tiles the grid streams. (4M vertices — the figure an old kernel.py
 # docstring quoted — would fill VMEM exactly and leave no tile headroom.)
 VMEM_VERTEX_LIMIT = 3_000_000
+
+# The budget the limits above are derived from, shared with
+# repro.tracecheck's vmem-footprint rule so the static linter and the
+# runtime gate can never disagree about what "fits": a TPU core's VMEM
+# minus headroom for Mosaic scratch/semaphores and scalar prefetch.
+VMEM_BYTES_PER_CORE = 16 * 2**20
+VMEM_HEADROOM_BYTES = 2**20
+
+
+def vmem_budget_bytes() -> int:
+    """Max estimated block footprint a dispatched kernel may occupy."""
+    return VMEM_BYTES_PER_CORE - VMEM_HEADROOM_BYTES
 
 
 def vmem_vertex_limit(dtype) -> int:

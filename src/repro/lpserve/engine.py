@@ -350,6 +350,36 @@ class LPEngine:
         state.active = [r for r in state.active if not r.search.done]
         return True
 
+    # ------------------------------------------------------- inspection --
+    def audit_launches(self) -> dict[tuple, tuple[Problem, jnp.ndarray]]:
+        """The (stacked problem, bounds) each dispatch key would launch next.
+
+        For every bucket with backlog, assembles the lanes exactly like
+        :meth:`step` — refill simulation, live probe bounds, idle-lane
+        duplication, :func:`stack_problems` — WITHOUT mutating any
+        engine state (queues, searches and stats are untouched), so
+        ``repro.tracecheck`` can lower and lint the real per-key
+        programs of a loaded engine. Keyed by the same ``(name, kind,
+        sense, bound_mode, bucket)`` dispatch key the jit cache sees.
+        """
+        out: dict[tuple, tuple[Problem, jnp.ndarray]] = {}
+        for key, state in self._buckets.items():
+            would_be_active = list(state.active)
+            backlog = list(state.queue)
+            while len(would_be_active) < self.cfg.lanes and backlog:
+                would_be_active.append(backlog.pop(0))
+            real = [(req, req.search.next_bound()) for req in would_be_active]
+            if not real:
+                continue
+            lanes = list(real)
+            if self.cfg.pad_lanes:
+                while len(lanes) < self.cfg.lanes:
+                    lanes.append(lanes[len(lanes) % len(real)])
+            stacked = stack_problems([req.padded for req, _ in lanes])
+            bounds = jnp.asarray([b for _, b in lanes])
+            out[key] = (stacked, bounds)
+        return out
+
     # ------------------------------------------------------------ sync --
     def run(self) -> dict[int, Solution]:
         """Drain every pending request; returns {rid: Solution}."""

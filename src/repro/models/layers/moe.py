@@ -159,9 +159,8 @@ def mwu_route(logits, k, capacity, mwu_iters=16):
         ExpertCapRows(inv_cap=jnp.full((E,), 1.0 / capacity, jnp.float32), T=T),
         BoxRows(n=T * E),
     ))
-    # objective embedding: <affin, x> >= M with M = 60% of the ideal k*T/E
-    # mass weighted by mean affinity (a conservative reachable bound)
-    M = 0.6 * float(k) * T / E * 1.0
+    # objective embedding: <affin, x> >= half the total affinity mass
+    # (a conservative reachable bound)
     C_op = VStack(ops=(
         TokenSumRows(inv_k=jnp.asarray(1.0 / k, jnp.float32), T=T, E=E),
         OnesRow(c=affin, inv_bound=jnp.asarray(1.0 / jnp.maximum(affin.sum() * 0.5, 1e-6))),
@@ -297,7 +296,6 @@ def moe_apply(params, x, cfg, mesh_axes=("data", "model"), rng=None):
         e_shard = None
     he = with_sharding(he, P(dp, e_shard, None, None))
 
-    pt = jnp.dtype(cfg.dtype) if hasattr(cfg, "dtype") else x.dtype
     hg = jax.nn.silu(
         jnp.einsum("gecd,edf->gecf", he, params["wg"].astype(x.dtype),
                    preferred_element_type=x.dtype)

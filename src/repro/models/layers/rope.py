@@ -16,7 +16,6 @@ def _rope_angles(positions, d_head: int, theta: float):
 
 def apply_rope(x, positions, theta: float = 10_000.0):
     """x: (B, S, H, D) -> rotated; positions: (B, S) or (S,)."""
-    B = x.shape[0]
     if positions.ndim == 1:
         positions = positions[None, :]
     cos, sin = _rope_angles(positions, x.shape[-1], theta)  # (B,S,half)

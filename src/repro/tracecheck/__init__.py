@@ -1,0 +1,42 @@
+"""Static jaxpr/HLO analysis gate for the solver's performance invariants.
+
+The paper's speedups live or die on per-iteration primitive cost: fused
+vector kernels on the hot path, no host round-trips inside the MWU
+``while`` loop, exactly the declared collectives per pod plan, a dtype
+that never silently widens. ``repro.tracecheck`` checks all of that
+*statically* — it lowers every hot entry point (``Solver.solve`` /
+``solve_batch`` per family, lpserve dispatch keys, ``DistSolver`` mesh
+plans, each Pallas kernel), inspects the jaxpr and optionally the
+compiled HLO, and fails CI when an invariant regresses.
+
+Layout:
+
+* :mod:`.hlo_ir`     — shared textual-HLO parser (also feeds
+  :mod:`repro.utils.hlo`'s roofline analyzer);
+* :mod:`.jaxpr_scan` — recursive jaxpr walkers with while-loop scoping;
+* :mod:`.rules`      — ``Rule`` / ``Finding`` framework + the six
+  default rules (see its docstring for the rule set and how to add one);
+* :mod:`.capture`    — AOT capture of each entry point via the solver
+  lowering hooks (nothing is executed);
+* :mod:`.matrix`     — the family × backend × mesh-plan sweep, shared
+  with ``benchmarks/run.py``;
+* :mod:`.report`     — baseline allowlist + ``TRACECHECK.json``;
+* CLI: ``python -m repro.tracecheck --matrix`` (see ``--help``).
+
+Intentional deviations are recorded per-fingerprint in
+``baseline.json`` (``{"allow": ["rule::artifact::key", ...]}``) rather
+than by disabling rules — see :mod:`.report`.
+
+Heavy submodules (capture pulls in api/dist/lpserve and jax) are
+imported lazily; importing :mod:`repro.tracecheck` itself stays cheap.
+"""
+from .rules import ERROR, WARNING, Finding, Rule, TraceArtifact, run_rules
+
+__all__ = [
+    "ERROR",
+    "WARNING",
+    "Finding",
+    "Rule",
+    "TraceArtifact",
+    "run_rules",
+]

@@ -1,0 +1,59 @@
+"""CLI entry: ``python -m repro.tracecheck --matrix``.
+
+Device fabrication (``--devices N``) must happen before jax initializes
+its backend, so this module parses argv and sets XLA_FLAGS *before*
+importing anything that imports jax (capture/rules). CI runs::
+
+    python -m repro.tracecheck --matrix --devices 8 --out TRACECHECK.json
+
+Exit status is 0 iff no error-severity finding is missing from the
+baseline allowlist (see :mod:`repro.tracecheck.report`).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tracecheck",
+        description="static jaxpr/HLO lint of the solver's performance invariants",
+    )
+    ap.add_argument("--matrix", action="store_true", help="run the default case sweep")
+    ap.add_argument("--quick", action="store_true", help="trimmed sweep, no HLO compiles")
+    ap.add_argument("--list", action="store_true", help="print the case names and exit")
+    ap.add_argument("--out", default=None, metavar="PATH", help="write TRACECHECK.json here")
+    ap.add_argument("--baseline", default=None, metavar="PATH", help="allowlist file override")
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=0,
+        metavar="N",
+        help="fabricate N host devices (XLA_FLAGS) so dist cases can run on CPU",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list:
+        from .matrix import default_matrix
+
+        for case in default_matrix(quick=args.quick):
+            print(case.name)
+        return 0
+    if not args.matrix:
+        ap.print_help()
+        return 2
+
+    if args.devices > 1:
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    from .cli import run_matrix
+
+    report = run_matrix(quick=args.quick, baseline=args.baseline, out=args.out)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

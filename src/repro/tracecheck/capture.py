@@ -1,0 +1,243 @@
+"""Capture hot-entry-point traces as :class:`TraceArtifact`s.
+
+One function per entry point class. All captures are *ahead-of-time*:
+the program is traced (``jax.make_jaxpr``) and optionally compiled
+(``.lower().compile().as_text()``) but never executed, using the
+lowering hooks on :class:`repro.api.Solver` / :class:`repro.dist.DistSolver`
+/ :class:`repro.lpserve.LPEngine` and :func:`repro.core.mwu.lower`.
+
+Expectations are computed here, from the same host-side facts the real
+dispatch uses: the resolved :class:`~repro.kernels.dispatch.KernelPolicy`
+(pallas in the loop only on unbatched paths — vmapped lanes take the
+custom_vmap XLA rule by design), the :class:`~repro.dist.mesh.MeshPlan`
+(two ``psum`` + one ``pmax`` per iteration under a pod-sharded plan,
+nothing under identity plans), and the problem's solve dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import dispatch as _kd
+from .rules import TraceArtifact
+
+__all__ = [
+    "build_problem",
+    "solve_dtype",
+    "capture_case",
+    "KERNEL_OPS",
+    "FAMILIES",
+]
+
+# Small-but-not-degenerate capture graphs: every family's operator zoo
+# member appears, line searches run several probes, masks exercise the
+# masked smoothing paths (gen-match).
+_GRAPH_SHAPE = (24, 60)  # (n_vertices, n_edges) for erdos captures
+
+FAMILIES = ("match", "vcover", "dense-sub", "gen-match")
+
+KERNEL_OPS = ("gather", "softmax", "probe", "axpy")
+
+
+def build_problem(family: str):
+    """A tiny representative :class:`~repro.api.Problem` of ``family``."""
+    from ..graphs import generators, problems
+
+    n, m = _GRAPH_SHAPE
+    g = generators.erdos(n, m, seed=7)
+    if family == "gen-match":
+        lb = np.zeros(g.n)
+        ub = np.full(g.n, 2.0)
+        return problems.generalized_matching_problem(g, lb, ub)
+    return problems.build(family, g)
+
+
+def _mid_bound(problem) -> float | None:
+    if problem.bound_mode == "none":
+        return None
+    lo, hi = float(problem.lo), float(problem.hi)
+    return lo * (hi / max(lo, 1e-300)) ** 0.5
+
+
+def solve_dtype(problem, bound=None) -> str:
+    """The dtype the MWU driver will run this problem in (mirrors _run_inner)."""
+    P, C, _, _ = problem.instantiate(bound)
+    dt = jnp.promote_types(P.colmax().dtype, C.colmax().dtype)
+    dt = dt if jnp.issubdtype(dt, jnp.floating) else jnp.float32
+    return jnp.dtype(dt).name
+
+
+def _base_expect(policy, opts, dtype, *, pallas_in_loop=False, collectives=None, traced=False):
+    return {
+        "traced": traced,
+        "pallas_in_loop": pallas_in_loop,
+        "collectives": dict(collectives or {}),
+        "dtype": dtype,
+        "max_iter": opts.max_iter,
+    }
+
+
+_POD_COLLECTIVES = {"psum": 2, "pmax": 1}  # dy, dz completions + max(d)
+
+
+def capture_case(case) -> TraceArtifact | None:
+    """Build the artifact for one matrix :class:`~repro.tracecheck.matrix.Case`.
+
+    Returns None when the case cannot run in this process (a mesh plan
+    wider than the visible device set) — the caller reports it skipped.
+    """
+    if case.entry == "kernel":
+        return _capture_kernel(case)
+
+    from ..api.solver import Solver
+    from ..core.mwu import MWUOptions
+
+    opts = MWUOptions(kernel_backend=case.backend)
+    policy = _kd.resolve(case.backend)
+    problem = build_problem(case.family)
+    bound = _mid_bound(problem)
+    dtype = solve_dtype(problem, bound)
+
+    if case.entry in ("solve", "solve_traced"):
+        solver = Solver(opts)
+        traced = case.entry == "solve_traced"
+        jaxpr = solver.jaxpr_feasible(problem, bound, trace=traced)
+        hlo_text = None
+        if case.hlo:
+            hlo_text = solver.lower_feasible(problem, bound, trace=traced).compile().as_text()
+        expect = _base_expect(
+            policy, opts, dtype,
+            pallas_in_loop=policy.backend == "pallas", traced=traced,
+        )
+        return TraceArtifact(
+            name=case.name, jaxpr=jaxpr, hlo_text=hlo_text,
+            policy=policy, opts=opts, expect=expect,
+        )
+
+    if case.entry == "solve_batch":
+        solver = Solver(opts)
+        bounds = _batch_bounds(problem, 2)
+        jaxpr = solver.jaxpr_batch(problem, bounds)
+        hlo_text = None
+        if case.hlo:
+            hlo_text = solver.lower_batch(problem, bounds).compile().as_text()
+        # vmapped lanes take the custom_vmap XLA batch rule: no pallas
+        expect = _base_expect(policy, opts, dtype, pallas_in_loop=False)
+        return TraceArtifact(
+            name=case.name, jaxpr=jaxpr, hlo_text=hlo_text,
+            policy=policy, opts=opts, expect=expect,
+        )
+
+    if case.entry == "dist":
+        from ..dist.mesh import MeshPlan
+        from ..dist.shard import pod_mode
+        from ..dist.solver import DistSolver
+
+        plan = MeshPlan(pod=case.pod, data=case.data)
+        if plan.n_devices > len(jax.devices()):
+            return None
+        solver = DistSolver(opts, plan=plan)
+        bounds = _batch_bounds(problem, plan.data)
+        mode = pod_mode(problem) if plan.pod > 1 else None
+        jaxpr = solver.jaxpr_batch(problem, bounds)
+        # B == data puts multi-device plans on the no-vmap fast path, so
+        # the kernel pack stays active there; identity plans vmap.
+        no_vmap = plan.n_devices > 1
+        expect = _base_expect(
+            policy, opts, dtype,
+            pallas_in_loop=policy.backend == "pallas" and no_vmap,
+            collectives=_POD_COLLECTIVES if plan.pod > 1 else None,
+        )
+        return TraceArtifact(
+            name=case.name, jaxpr=jaxpr, policy=policy, opts=opts,
+            plan=plan, pod_mode=mode, expect=expect,
+        )
+
+    if case.entry == "lpserve":
+        from ..lpserve import LPEngine, LPServeConfig
+
+        eng = LPEngine(LPServeConfig(opts=opts, lanes=case.lanes))
+        for seed in (1, 2):
+            from ..graphs import generators, problems
+
+            g = generators.erdos(*_GRAPH_SHAPE, seed=seed)
+            if case.family == "gen-match":
+                p = problems.generalized_matching_problem(
+                    g, np.zeros(g.n), np.full(g.n, 2.0)
+                )
+            else:
+                p = problems.build(case.family, g)
+            eng.submit(p)
+        arts = []
+        for key, (stacked, bounds) in eng.audit_launches().items():
+            jaxpr = eng.solver.jaxpr_batch(stacked, bounds, batched_problem=True)
+            hlo_text = None
+            if case.hlo:
+                hlo_text = (
+                    eng.solver.lower_batch(stacked, bounds, batched_problem=True)
+                    .compile()
+                    .as_text()
+                )
+            template = jax.tree.map(lambda a: jnp.asarray(a)[0], stacked)
+            expect = _base_expect(
+                policy, opts, solve_dtype(template, float(np.asarray(bounds)[0])),
+                pallas_in_loop=False,
+            )
+            arts.append(TraceArtifact(
+                name=f"{case.name}[{key[0]}/{key[4]}]", jaxpr=jaxpr,
+                hlo_text=hlo_text, policy=policy, opts=opts, expect=expect,
+            ))
+        return arts
+
+    raise ValueError(f"unknown tracecheck entry {case.entry!r}")
+
+
+def _batch_bounds(problem, width: int):
+    b = _mid_bound(problem)
+    if b is None:
+        return jnp.ones((width,))
+    lo, hi = float(problem.lo), float(problem.hi)
+    r = hi / max(lo, 1e-300)
+    return jnp.asarray([lo * r ** ((k + 1) / (width + 1)) for k in range(width)])
+
+
+# ----------------------------------------------------------- raw kernels --
+def _capture_kernel(case) -> TraceArtifact:
+    """Trace one Pallas kernel abstractly at its dispatch-gate limit shape.
+
+    Shapes are ``jax.ShapeDtypeStruct``s so nothing is allocated: the
+    VMEM rule sees the BlockSpecs exactly as a real TPU launch at the
+    largest size the per-op gate admits.
+    """
+    from ..kernels.axpy_reduce.kernel import axpy_reduce_pallas
+    from ..kernels.incidence_gather.kernel import incidence_gather_pallas
+    from ..kernels.linesearch_probe.kernel import linesearch_probe_pallas
+    from ..kernels.softmax_weights.kernel import softmax_weights_pallas
+
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    n_limit = _kd.vmem_vertex_limit(f32)
+    m = 1 << 20  # streamed constraint-space length: VMEM use is grid-invariant
+
+    if case.op == "gather":
+        fn = lambda u, v, w: incidence_gather_pallas(u, v, w, interpret=True)
+        args = (sds((4096,), jnp.int32), sds((4096,), jnp.int32), sds((n_limit,), f32))
+    elif case.op == "softmax":
+        fn = lambda v, eta: softmax_weights_pallas(v, eta, sign=1.0, interpret=True)
+        args = (sds((m,), f32), sds((), f32))
+    elif case.op == "probe":
+        fn = lambda y, dy, a, eta: linesearch_probe_pallas(y, dy, a, eta, sign=1.0, interpret=True)
+        args = (sds((m,), f32), sds((m,), f32), sds((), f32), sds((), f32))
+    elif case.op == "axpy":
+        fn = lambda y, dy, a: axpy_reduce_pallas(y, dy, a, interpret=True)
+        args = (sds((m,), f32), sds((m,), f32), sds((), f32))
+    else:
+        raise ValueError(f"unknown kernel op {case.op!r}")
+
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    policy = _kd.KernelPolicy("pallas", interpret=True)
+    return TraceArtifact(
+        name=case.name, jaxpr=jaxpr, policy=policy,
+        expect={"pallas_anywhere": True, "dtype": "float32", "collectives": {}},
+    )

@@ -1,0 +1,52 @@
+"""Programmatic runner behind ``python -m repro.tracecheck``.
+
+:func:`run_matrix` captures every case, applies the rule set and builds
+the report dict; :mod:`.__main__` wraps it in argument parsing and the
+exit code. ``benchmarks/run.py``'s ``tracecheck`` section calls
+:func:`run_matrix` directly so the bench driver and the lint gate share
+one matrix definition (:func:`repro.tracecheck.matrix.default_matrix`).
+"""
+from __future__ import annotations
+
+from .matrix import Case, default_matrix
+from .report import build_report, load_baseline, summarize, write_report
+from .rules import run_rules
+
+__all__ = ["run_matrix"]
+
+
+def run_matrix(
+    cases: list[Case] | None = None,
+    *,
+    quick: bool = False,
+    baseline: str | None = None,
+    out: str | None = None,
+    verbose: bool = True,
+) -> dict:
+    """Capture + lint the sweep; returns the report dict (see ``ok`` key).
+
+    Cases whose mesh plan needs more devices than the process has are
+    reported under ``skipped`` rather than failing — CI fabricates
+    devices via ``--devices`` / XLA_FLAGS, single-device runs still lint
+    everything else.
+    """
+    from .capture import capture_case  # imports jax: keep lazy for --devices
+
+    cases = default_matrix(quick=quick) if cases is None else cases
+    artifacts = []
+    skipped = []
+    for case in cases:
+        got = capture_case(case)
+        if got is None:
+            skipped.append(case.name)
+            continue
+        artifacts.extend(got if isinstance(got, list) else [got])
+
+    findings = run_rules(artifacts)
+    allow = load_baseline(baseline)
+    report = build_report(cases, artifacts, findings, allow, skipped=skipped)
+    if out:
+        write_report(report, out)
+    if verbose:
+        print(summarize(report))
+    return report

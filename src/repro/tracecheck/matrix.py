@@ -1,0 +1,85 @@
+"""The family × backend × mesh-plan sweep both gates share.
+
+:func:`default_matrix` is the single definition of "every hot entry
+point": the CLI lint gate (``python -m repro.tracecheck --matrix``), the
+CI job and the ``benchmarks/run.py tracecheck`` section all iterate the
+same :class:`Case` list, so the benched configurations and the linted
+configurations cannot drift apart.
+
+A :class:`Case` is pure host data (no jax imports here): entry kind,
+problem family, kernel backend, and for dist cases the (pod, data) plan.
+Capture happens in :mod:`.capture`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["Case", "default_matrix"]
+
+
+@dataclass(frozen=True)
+class Case:
+    """One cell of the tracecheck sweep."""
+
+    entry: str  # solve | solve_batch | solve_traced | dist | lpserve | kernel
+    family: str = ""  # problem family ("" for kernel cases)
+    backend: str = "xla"  # kernel_backend passed to MWUOptions
+    pod: int = 1  # dist only
+    data: int = 1  # dist only
+    lanes: int = 4  # lpserve only
+    hlo: bool = False  # also compile + lint the HLO (slower)
+    op: str = ""  # kernel cases: gather | softmax | probe | axpy
+
+    @property
+    def name(self) -> str:
+        if self.entry == "kernel":
+            return f"kernel:{self.op}"
+        bits = [self.entry, self.family, self.backend]
+        if self.entry == "dist":
+            bits.append(f"pod{self.pod}x{self.data}")
+        return ":".join(bits)
+
+
+def default_matrix(quick: bool = False) -> list[Case]:
+    """The default sweep (``quick`` trims families and skips HLO compiles).
+
+    Composition:
+
+    * ``solve`` per family under both backends, with compiled-HLO lint
+      on the xla cells (trip count, f64 survival, loop custom-calls);
+    * one ``solve_traced`` cell (the io_callback hook must be traced,
+      and only when asked for);
+    * ``solve_batch`` per family (vmapped lanes: kernel pack must be
+      absent by the custom_vmap design);
+    * ``dist`` plans: identity (1,1) — bit-parity, no collectives —
+      plus pod-sharded (2,1) and data-sharded (1,2) under both backends
+      (skipped at runtime when the process has fewer devices);
+    * one ``lpserve`` engine audit per backend (every (family, bucket)
+      dispatch key it assembles);
+    * each Pallas kernel at its dispatch-gate limit shape (VMEM rule).
+    """
+    families = ["match", "vcover"] if quick else ["match", "vcover", "dense-sub", "gen-match"]
+    hlo = not quick
+    cases: list[Case] = []
+
+    for fam in families:
+        for backend in ("xla", "pallas"):
+            cases.append(Case("solve", fam, backend, hlo=hlo and backend == "xla"))
+        cases.append(Case("solve_batch", fam, "xla", hlo=hlo and fam == families[0]))
+    cases.append(Case("solve_batch", families[0], "pallas"))
+    cases.append(Case("solve_traced", families[0], "xla"))
+
+    cases.append(Case("dist", families[0], "xla", pod=1, data=1))
+    for backend in ("xla", "pallas"):
+        cases.append(Case("dist", families[0], backend, pod=2, data=1))
+        cases.append(Case("dist", families[0], backend, pod=1, data=2))
+    if not quick:
+        cases.append(Case("dist", "gen-match", "xla", pod=2, data=1))
+
+    cases.append(Case("lpserve", families[0], "xla", hlo=False))
+    if not quick:
+        cases.append(Case("lpserve", "vcover", "pallas"))
+
+    for op in ("gather", "softmax", "probe", "axpy"):
+        cases.append(Case("kernel", op=op))
+    return cases

@@ -1,0 +1,86 @@
+"""Baseline allowlist + TRACECHECK.json reporting.
+
+The baseline (``baseline.json`` next to this module, or any file passed
+via ``--baseline``) is ``{"allow": [<fingerprint>, ...]}``: a list of
+:attr:`Finding.fingerprint` strings for known, accepted violations.
+The gate fails only on *new* error-severity findings, so an intentional
+deviation is recorded once (add its fingerprint to the allow list with a
+comment in the PR) instead of silencing the rule wholesale. Warnings
+never fail the gate; they appear in the report for triage.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .rules import ERROR, Finding
+
+__all__ = [
+    "DEFAULT_BASELINE",
+    "load_baseline",
+    "split_findings",
+    "build_report",
+    "write_report",
+    "summarize",
+]
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load_baseline(path: str | None = None) -> set[str]:
+    """Allowed fingerprints from a baseline file (missing file = empty)."""
+    path = path or DEFAULT_BASELINE
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        data = json.load(f)
+    return set(data.get("allow", []))
+
+
+def split_findings(findings: list[Finding], allow: set[str]):
+    """(new, baselined) partition of findings by baseline fingerprint."""
+    new = [f for f in findings if f.fingerprint not in allow]
+    old = [f for f in findings if f.fingerprint in allow]
+    return new, old
+
+
+def build_report(cases, artifacts, findings, allow, *, skipped=()) -> dict:
+    """The TRACECHECK.json payload. ``ok`` gates the process exit code."""
+    new, baselined = split_findings(findings, allow)
+    new_errors = [f for f in new if f.severity == ERROR]
+    return {
+        "matrix": [c.name for c in cases],
+        "artifacts": [a.name for a in artifacts],
+        "skipped": list(skipped),
+        "findings": [
+            {**f.as_dict(), "baselined": f.fingerprint in allow} for f in findings
+        ],
+        "n_findings": len(findings),
+        "n_new_errors": len(new_errors),
+        "n_baselined": len(baselined),
+        "ok": not new_errors,
+    }
+
+
+def write_report(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def summarize(report: dict) -> str:
+    """Human one-screen summary for CLI stdout / bench logs."""
+    lines = [
+        f"tracecheck: {len(report['artifacts'])} artifact(s) from "
+        f"{len(report['matrix'])} case(s)"
+        + (f", {len(report['skipped'])} skipped (too few devices)" if report["skipped"] else "")
+    ]
+    for f in report["findings"]:
+        tag = "baselined" if f["baselined"] else f["severity"]
+        lines.append(f"  [{tag}] {f['fingerprint']}: {f['message']}")
+    if not report["findings"]:
+        lines.append("  no findings")
+    lines.append(
+        "PASS" if report["ok"] else f"FAIL: {report['n_new_errors']} new error finding(s)"
+    )
+    return "\n".join(lines)

@@ -8,16 +8,24 @@ not one per call.
 """
 from __future__ import annotations
 
+import threading
 import warnings
 
 __all__ = ["warn_once"]
 
 _WARNED: set[str] = set()
+_LOCK = threading.Lock()
 
 
 def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
-    """Emit ``DeprecationWarning(message)`` the first time ``key`` is seen."""
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
+    """Emit ``DeprecationWarning(message)`` the first time ``key`` is seen.
+
+    Thread-safe: concurrent first calls with the same key (a serving
+    engine warming workers through a shim) race on the seen-set, so the
+    check-and-mark is done under a lock and exactly one thread warns.
+    """
+    with _LOCK:
+        if key in _WARNED:
+            return
+        _WARNED.add(key)
     warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)

@@ -22,32 +22,30 @@ from the *scheduled HLO text* of the compiled executable:
         collective-permute             size
 
   with every ``while(cond, body)`` contribution multiplied by the trip
-  count recovered from the loop-bound constant in the condition
-  computation (max s32/s64 literal — exact for lax.scan/fori loops).
+  count recovered from the condition computation (the constants feeding
+  its loop-bound compare — exact for lax.scan/fori loops).
 
-Validated against closed-form expectations in tests/test_hlo_analyzer.py.
+The HLO text parser itself lives in :mod:`repro.tracecheck.hlo_ir`,
+shared with the static-analysis gate so the roofline and the linter
+read one IR. Validated against closed-form expectations in
+tests/test_hlo_analyzer.py.
 """
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloReport"]
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+from ..tracecheck.hlo_ir import (
+    Computation,
+    Op,
+    group_size,
+    parse_hlo,
+    shape_bytes,
+    shape_dims,
+    trip_count,
 )
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+__all__ = ["analyze_hlo", "HloReport"]
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 _SKIP_BYTES = {
@@ -55,61 +53,6 @@ _SKIP_BYTES = {
     "after-all", "broadcast", "reshape", "while", "conditional", "call",
     "custom-call", "partition-id", "replica-id", "domain", "opt-barrier",
 }
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _shape_dims(type_str: str):
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
-
-
-@dataclass
-class _Op:
-    name: str
-    type_str: str
-    kind: str
-    rest: str  # operands + attrs (raw tail of the line)
-
-    @property
-    def operands(self):
-        # operand names appear before the closing paren of the call
-        depth = 0
-        for i, ch in enumerate(self.rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                if depth == 0:
-                    head = self.rest[:i]
-                    break
-                depth -= 1
-        else:
-            head = self.rest
-        return re.findall(r"%([\w.\-]+)", head)
-
-    @property
-    def attrs(self):
-        return self.rest
-
-
-@dataclass
-class _Comp:
-    name: str
-    ops: list = field(default_factory=list)
-    by_name: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -139,45 +82,9 @@ class HloReport:
         }
 
 
-_COMMENT_RE = re.compile(r"/\*.*?\*/")
-
-
-def _parse(text: str) -> dict[str, _Comp]:
-    comps: dict[str, _Comp] = {}
-    cur: _Comp | None = None
-    for line in text.splitlines():
-        if "/*" in line:  # strip /*index=N*/ tuple comments ('=' breaks _OP_RE)
-            line = _COMMENT_RE.sub("", line)
-        if cur is None:
-            m = _COMP_RE.match(line)
-            if m and ("->" in line):
-                cur = _Comp(name=m.group(1))
-            continue
-        if line.startswith("}"):
-            comps[cur.name] = cur
-            cur = None
-            continue
-        m = _OP_RE.match(line)
-        if m:
-            op = _Op(name=m.group(1), type_str=m.group(2), kind=m.group(3), rest=m.group(4))
-            cur.ops.append(op)
-            cur.by_name[op.name] = op
-    return comps
-
-
-def _group_size(attrs: str, num_partitions: int) -> int:
-    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", attrs)
-    if m:
-        return len(m.group(1).split(","))
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
-    if m:
-        return int(m.group(2))
-    return max(num_partitions, 1)
-
-
-def _dot_flops(op: _Op, comp: _Comp) -> float:
+def _dot_flops(op: Op, comp: Computation) -> float:
     out_numel = 1
-    for d in _shape_dims(op.type_str):
+    for d in shape_dims(op.type_str):
         out_numel *= d
     # contraction size from lhs operand shape
     lhs_name = op.operands[0] if op.operands else None
@@ -185,35 +92,12 @@ def _dot_flops(op: _Op, comp: _Comp) -> float:
     k = 1
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
     if lhs is not None and m and m.group(1):
-        dims = _shape_dims(lhs.type_str)
+        dims = shape_dims(lhs.type_str)
         for ci in m.group(1).split(","):
             ci = int(ci)
             if ci < len(dims):
                 k *= dims[ci]
     return 2.0 * out_numel * k
-
-
-def _trip_count(comps, cond_name: str) -> int:
-    """Max integer literal in the condition computation (lax loop bound)."""
-    best = 1
-    seen = set()
-    stack = [cond_name]
-    while stack:
-        cn = stack.pop()
-        if cn in seen or cn not in comps:
-            continue
-        seen.add(cn)
-        for op in comps[cn].ops:
-            if op.kind == "constant":
-                m = re.match(r"\s*(\d+)\)", op.rest)
-                if m:
-                    best = max(best, int(m.group(1)))
-            for c in _CONST_RE.findall(op.rest):
-                best = max(best, int(c))
-            m = re.search(r"calls=%([\w.\-]+)", op.rest)
-            if m:
-                stack.append(m.group(1))
-    return best
 
 
 _PASS_THROUGH = {"bitcast", "reshape", "copy", "transpose", "convert", "bitcast-convert"}
@@ -259,11 +143,11 @@ def _fusion_param_charges(comps, fusion_comp: str) -> dict[int, float]:
                 if op.kind in _PASS_THROUGH:
                     stack.append(op.name)
                 elif op.kind in ("dynamic-slice", "gather") and i == 0:
-                    slice_bytes += _shape_bytes(op.type_str)
+                    slice_bytes += shape_bytes(op.type_str)
                 elif op.kind == "dynamic-update-slice" and i == 0:
                     # in-place window update: charged via the update operand
                     upd = comp.by_name.get(op.operands[1])
-                    slice_bytes += _shape_bytes(upd.type_str) if upd else _shape_bytes(op.type_str)
+                    slice_bytes += shape_bytes(upd.type_str) if upd else shape_bytes(op.type_str)
                 else:
                     ok = False
                     break
@@ -272,14 +156,14 @@ def _fusion_param_charges(comps, fusion_comp: str) -> dict[int, float]:
     return charges
 
 
-def _op_bytes(op: _Op, comp: _Comp, comps) -> float:
+def _op_bytes(op: Op, comp: Computation, comps) -> float:
     """Post-fusion HBM bytes for one top-level op."""
-    out_b = _shape_bytes(op.type_str)
+    out_b = shape_bytes(op.type_str)
     if op.kind in ("dynamic-slice", "gather"):
         return 2.0 * out_b  # read slice + write output
     if op.kind == "dynamic-update-slice":
         upd = comp.by_name.get(op.operands[1]) if len(op.operands) > 1 else None
-        ub = _shape_bytes(upd.type_str) if upd is not None else out_b
+        ub = shape_bytes(upd.type_str) if upd is not None else out_b
         return 2.0 * ub  # in-place: read+write the updated window
     total = float(out_b)
     charges: dict[int, float] = {}
@@ -293,37 +177,30 @@ def _op_bytes(op: _Op, comp: _Comp, comps) -> float:
                 # remat stash write of a scanned layer stack): the write
                 # traffic is the update slice, not the whole buffer.
                 for iop in inner.ops:
-                    if iop.kind == "dynamic-update-slice" and _shape_bytes(
+                    if iop.kind == "dynamic-update-slice" and shape_bytes(
                         iop.type_str
                     ) == out_b:
                         upd = inner.by_name.get(iop.operands[1]) if len(iop.operands) > 1 else None
                         if upd is not None:
-                            total = float(_shape_bytes(upd.type_str))
+                            total = float(shape_bytes(upd.type_str))
                         break
     for i, name in enumerate(op.operands):
         src = comp.by_name.get(name)
         if src is None:
             continue
         if i in charges:
-            total += min(charges[i], _shape_bytes(src.type_str))
+            total += min(charges[i], shape_bytes(src.type_str))
             continue
-        total += _shape_bytes(src.type_str)
+        total += shape_bytes(src.type_str)
     return total
 
 
 def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
-    comps = _parse(text)
+    mod = parse_hlo(text)
+    comps = mod.comps
     rep = HloReport()
     memo: dict[str, tuple] = {}
-
-    entry = None
-    m = re.search(r"entry_computation_layout", text)
-    # entry computation is the one marked ENTRY in the text
-    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
-    if em:
-        entry = em.group(1)
-    if entry is None and comps:
-        entry = list(comps)[-1]
+    entry = mod.entry
 
     ZERO = (0.0, 0.0, 0.0, 0.0, {}, 0, [])
 
@@ -356,7 +233,7 @@ def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
             if kind == "while":
                 cond = re.search(r"condition=%([\w.\-]+)", op.rest)
                 body = re.search(r"body=%([\w.\-]+)", op.rest)
-                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                trips = trip_count(comps, cond.group(1)) if cond else 1
                 rep.while_trips[op.name] = trips
                 if body:
                     absorb(analyze_comp(body.group(1)), trips)
@@ -370,8 +247,8 @@ def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
             # collectives (match base kind; e.g. all-reduce-start)
             base = next((c for c in _COLLECTIVES if kind.startswith(c)), None)
             if base is not None:
-                g = _group_size(op.rest, num_partitions)
-                size = _shape_bytes(op.type_str)
+                g = group_size(op.rest, num_partitions)
+                size = shape_bytes(op.type_str)
                 if base == "all-reduce":
                     w = 2.0 * (g - 1) / max(g, 1) * size
                 elif base == "all-gather":
@@ -401,7 +278,7 @@ def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
                             dflops += _dot_flops(iop, inner)
                         elif iop.kind not in _SKIP_BYTES:
                             n = 1
-                            for d in _shape_dims(iop.type_str):
+                            for d in shape_dims(iop.type_str):
                                 n *= d
                             fflops += n  # 1 flop/element estimate
                 bytes_ += _op_bytes(op, comp, comps)

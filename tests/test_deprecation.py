@@ -1,0 +1,58 @@
+"""utils.deprecation.warn_once: once per process per key, thread-safe."""
+import threading
+import warnings
+
+from repro.utils import deprecation
+from repro.utils.deprecation import warn_once
+
+
+def _fresh(monkeypatch):
+    monkeypatch.setattr(deprecation, "_WARNED", set())
+
+
+def test_warns_once_per_key(monkeypatch):
+    _fresh(monkeypatch)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        warn_once("k1", "shim k1 is deprecated")
+        warn_once("k1", "shim k1 is deprecated")
+        warn_once("k1", "different text, same key")
+    assert len(rec) == 1
+    assert issubclass(rec[0].category, DeprecationWarning)
+    assert "k1" in str(rec[0].message)
+
+
+def test_distinct_keys_each_warn(monkeypatch):
+    _fresh(monkeypatch)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        warn_once("a", "A")
+        warn_once("b", "B")
+        warn_once("a", "A again")
+    assert [str(r.message) for r in rec] == ["A", "B"]
+
+
+def test_thread_safe_reentry(monkeypatch):
+    """N threads racing on one fresh key must produce exactly one warning.
+
+    The recorder is installed once in the main thread (catch_warnings
+    itself mutates global state and is not safe to nest concurrently);
+    a barrier lines all threads up on the same first-call race.
+    """
+    _fresh(monkeypatch)
+    n = 16
+    barrier = threading.Barrier(n)
+
+    def hit():
+        barrier.wait()
+        warn_once("raced", "raced shim")
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        threads = [threading.Thread(target=hit) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(rec) == 1
+    assert "raced" in str(rec[0].message)

@@ -57,6 +57,44 @@ def test_scan_weight_slices_not_overcharged():
     assert rep.hbm_bytes < full_buffer_per_iter
 
 
+_SYNTHETIC_WHILE_HLO = """\
+HloModule synth
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %it = s32[] get-tuple-element((s32[], f32[8]) %p), index=0
+  %junk = s32[] constant(999999)
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %it, s32[] %k), direction=LT
+}
+
+%body (q: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %q = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8]) %q), index=0
+  %v = f32[8] get-tuple-element((s32[], f32[8]) %q), index=1
+  %one = s32[] constant(1)
+  %i1 = s32[] add(s32[] %i, s32[] %one)
+  %v2 = f32[8] add(f32[8] %v, f32[8] %v)
+  ROOT %t = (s32[], f32[8]) tuple(s32[] %i1, f32[8] %v2)
+}
+
+ENTRY %main (x: f32[8]) -> (s32[], f32[8]) {
+  %x = f32[8] parameter(0)
+  %z = s32[] constant(0)
+  %c0 = (s32[], f32[8]) tuple(s32[] %z, f32[8] %x)
+  ROOT %w = (s32[], f32[8]) while((s32[], f32[8]) %c0), condition=%cond, body=%body
+}
+"""
+
+
+def test_trip_count_ignores_unrelated_constants():
+    """Regression: the old heuristic took the max int literal anywhere in
+    the condition, so %junk = constant(999999) inflated trips 142857x.
+    Only constants feeding the loop-bound compare may count."""
+    rep = analyze_hlo(_SYNTHETIC_WHILE_HLO)
+    assert rep.while_trips == {"w": 7}
+
+
 def test_collective_wire_formula():
     import subprocess, sys, json, textwrap
     from pathlib import Path

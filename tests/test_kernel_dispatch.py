@@ -316,14 +316,13 @@ def test_solve_pallas_matches_xla(family):
 
 def test_solve_batch_pallas_backend_vmaps():
     """solve_batch vmaps the whole loop; pallas backend must still work."""
-    from repro.api import MWUOptions, Solver
+    from repro.api import MWUOptions
     from repro.api.solver import _feasibility_batch
 
     prob = build("match", grid2d(4))
     out = {}
     for be in ["xla", "pallas"]:
         opts = MWUOptions(eps=0.2, step_rule="newton", max_iter=5000, kernel_backend=be)
-        solver = Solver(opts, batch_width=4)
         kernels = kd.resolve(be)
         res = _feasibility_batch(
             prob, jnp.asarray([4.0, 8.0, 12.0, 16.0]), opts, None, kernels=kernels

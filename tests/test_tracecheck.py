@@ -1,0 +1,301 @@
+"""repro.tracecheck: the gate passes on the real tree and fails on
+deliberately broken invariants (ISSUE 9 acceptance criteria)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api.solver import Solver
+from repro.core.mwu import MWUOptions
+from repro.graphs import generators, problems
+from repro.kernels import dispatch as _kd
+from repro.tracecheck import Finding, TraceArtifact, run_rules
+from repro.tracecheck.capture import capture_case, solve_dtype
+from repro.tracecheck.matrix import Case, default_matrix
+from repro.tracecheck.report import build_report, load_baseline, split_findings
+from repro.tracecheck.rules import (
+    DtypeRule,
+    HostCallbackRule,
+    KernelPathRule,
+    LoopCollectivesRule,
+    TripCountRule,
+    VmemFootprintRule,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return problems.build("match", generators.erdos(24, 60, seed=7))
+
+
+@pytest.fixture(scope="module")
+def solver():
+    return Solver(MWUOptions())
+
+
+def _bound(problem):
+    lo, hi = float(problem.lo), float(problem.hi)
+    return lo * (hi / lo) ** 0.5
+
+
+# --------------------------------------------------------- clean passes --
+def test_clean_solve_artifacts_have_no_findings():
+    for backend in ("xla", "pallas"):
+        case = Case("solve", "match", backend)
+        art = capture_case(case)
+        assert run_rules([art]) == [], f"backend={backend}"
+
+
+def test_quick_matrix_single_device_passes():
+    """The bench-shared quick sweep is clean on the current tree (cases
+    needing more devices than the test session's one are skipped)."""
+    arts = []
+    for case in default_matrix(quick=True):
+        got = capture_case(case)
+        if got is None:
+            continue
+        arts.extend(got if isinstance(got, list) else [got])
+    assert arts, "quick matrix captured nothing"
+    findings = run_rules(arts)
+    assert findings == [], [f.fingerprint for f in findings]
+
+
+# ------------------------------------------------- broken: kernel path --
+def test_kernel_path_missing_pallas_fails(problem, solver):
+    """kernel_backend=pallas with the custom-call stripped: lint an XLA
+    trace under a pallas expectation -> the kernel-path rule must fire."""
+    jaxpr = solver.jaxpr_feasible(problem, _bound(problem))  # xla trace
+    art = TraceArtifact(
+        name="broken:pallas-stripped",
+        jaxpr=jaxpr,
+        policy=_kd.resolve("pallas"),
+        expect={"pallas_in_loop": True, "collectives": {}, "dtype": solve_dtype(problem, _bound(problem))},
+    )
+    fps = [f.fingerprint for f in KernelPathRule().check(art)]
+    assert "kernel-path::broken:pallas-stripped::missing" in fps
+
+
+def test_kernel_path_unexpected_pallas_fails(problem):
+    """A pallas_call on a path declared xla/batched is also a violation."""
+    pallas_solver = Solver(MWUOptions(kernel_backend="pallas"))
+    jaxpr = pallas_solver.jaxpr_feasible(problem, _bound(problem))
+    art = TraceArtifact(
+        name="broken:unexpected-pallas", jaxpr=jaxpr, expect={"pallas_in_loop": False}
+    )
+    fps = [f.fingerprint for f in KernelPathRule().check(art)]
+    assert "kernel-path::broken:unexpected-pallas::unexpected" in fps
+
+
+# ------------------------------------------- broken: loop collectives --
+def test_extra_collective_in_loop_fails():
+    """A psum traced into the while body of a plan that declares none."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.mesh import POD_AXIS, MeshPlan
+
+    plan = MeshPlan()  # identity plan: declared in-loop collectives = {}
+
+    def body(x):
+        def cond(s):
+            return s[0] < 3
+
+        def step(s):
+            return s[0] + 1, jax.lax.psum(s[1], POD_AXIS)
+
+        return jax.lax.while_loop(cond, step, (0, x))[1]
+
+    fn = plan.shard_map(body, in_specs=(P(),), out_specs=P())
+    jaxpr = jax.make_jaxpr(fn)(jnp.ones(4))
+    art = TraceArtifact(name="broken:psum", jaxpr=jaxpr, expect={"collectives": {}})
+    findings = LoopCollectivesRule().check(art)
+    assert len(findings) == 1
+    assert findings[0].detail["got"] == {"psum": 1}
+
+
+def test_matching_collectives_pass():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.mesh import POD_AXIS, MeshPlan
+
+    plan = MeshPlan()
+
+    def body(x):
+        def cond(s):
+            return s[0] < 3
+
+        def step(s):
+            return s[0] + 1, jax.lax.psum(s[1], POD_AXIS)
+
+        return jax.lax.while_loop(cond, step, (0, x))[1]
+
+    fn = plan.shard_map(body, in_specs=(P(),), out_specs=P())
+    jaxpr = jax.make_jaxpr(fn)(jnp.ones(4))
+    art = TraceArtifact(
+        name="ok:psum", jaxpr=jaxpr, expect={"collectives": {"psum": 1}}
+    )
+    assert LoopCollectivesRule().check(art) == []
+
+
+# ------------------------------------------------ broken: host callback --
+def test_callback_inside_loop_fails():
+    def f(x):
+        def cond(s):
+            return s < 3.0
+
+        def step(s):
+            jax.debug.callback(lambda v: None, s)
+            return s + 1.0
+
+        return jax.lax.while_loop(cond, step, x)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.float32(0.0))
+    art = TraceArtifact(name="broken:callback", jaxpr=jaxpr, expect={})
+    findings = HostCallbackRule().check(art)
+    assert len(findings) == 1
+    assert findings[0].key == "debug_callback"
+    assert findings[0].severity == "error"
+
+
+def test_traced_solve_io_callback_is_allowed(problem, solver):
+    """The opt-in trace hook's io_callback must NOT trip the rule."""
+    jaxpr = solver.jaxpr_feasible(problem, _bound(problem), trace=True)
+    art = TraceArtifact(name="traced", jaxpr=jaxpr, expect={"traced": True})
+    assert HostCallbackRule().check(art) == []
+
+
+# --------------------------------------------------- broken: vmem budget --
+def test_vmem_footprint_over_budget_fails():
+    """A gather holding 2x the vertex limit resident must blow the budget
+    (abstract trace only: nothing this size is allocated)."""
+    from repro.kernels.incidence_gather.kernel import incidence_gather_pallas
+
+    n = 2 * _kd.vmem_vertex_limit(jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda u, v, w: incidence_gather_pallas(u, v, w, interpret=True)
+    )(
+        jax.ShapeDtypeStruct((4096,), jnp.int32),
+        jax.ShapeDtypeStruct((4096,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    art = TraceArtifact(
+        name="broken:vmem", jaxpr=jaxpr, expect={"pallas_anywhere": True}
+    )
+    findings = VmemFootprintRule().check(art)
+    assert len(findings) == 1
+    assert findings[0].detail["bytes"] > findings[0].detail["budget"]
+
+
+def test_vmem_footprint_at_gate_limit_passes():
+    art = capture_case(Case("kernel", op="gather"))
+    assert VmemFootprintRule().check(art) == []
+
+
+# -------------------------------------- synthetic HLO: trip count, dtype --
+_HLO = """\
+HloModule synth
+
+%cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %it = s32[] get-tuple-element((s32[]) %p), index=0
+  %junk = s32[] constant(424242)
+  %k = s32[] constant(MAXITER)
+  ROOT %lt = pred[] compare(s32[] %it, s32[] %k), direction=LT
+}
+
+%body (q: (s32[])) -> (s32[]) {
+  %q = (s32[]) parameter(0)
+  %i = s32[] get-tuple-element((s32[]) %q), index=0
+  %one = s32[] constant(1)
+  ROOT %t = (s32[]) tuple(s32[] add(s32[] %i, s32[] %one))
+}
+
+ENTRY %main (x: s32[]) -> (s32[]) {
+  %x = s32[] parameter(0)
+  %z = s32[] constant(0)
+  %c0 = (s32[]) tuple(s32[] %z)
+  ROOT %w = (s32[]) while((s32[]) %c0), condition=%cond, body=%body
+}
+"""
+
+
+def test_trip_count_matches_max_iter():
+    opts = MWUOptions(max_iter=321)
+    art = TraceArtifact(
+        name="synth", hlo_text=_HLO.replace("MAXITER", "321"), opts=opts,
+        expect={"max_iter": 321},
+    )
+    assert TripCountRule().check(art) == []
+
+
+def test_trip_count_drift_fails():
+    """Compiled cap != MWUOptions.max_iter (and the unrelated 424242
+    constant must not mask the drift by inflating the recovered bound)."""
+    opts = MWUOptions(max_iter=500)
+    art = TraceArtifact(
+        name="synth-drift", hlo_text=_HLO.replace("MAXITER", "321"), opts=opts,
+        expect={"max_iter": 500},
+    )
+    findings = TripCountRule().check(art)
+    assert len(findings) == 1
+    assert findings[0].detail["trips"] == [321]
+
+
+def test_dtype_rule_flags_f64_leak():
+    def f(x):
+        return x * 1.5e300  # forces an f64 constant under x64
+
+    jaxpr = jax.make_jaxpr(f)(jnp.float64(1.0))
+    art = TraceArtifact(name="leak", jaxpr=jaxpr, expect={"dtype": "float32"})
+    fps = [f.fingerprint for f in DtypeRule().check(art)]
+    assert "dtype-discipline::leak::jaxpr" in fps
+
+
+def test_dtype_rule_respects_f64_problems():
+    """An f64 solve (x64 test sessions) has nothing wider to leak into."""
+    jaxpr = jax.make_jaxpr(lambda x: x * 2.0)(jnp.float64(1.0))
+    art = TraceArtifact(name="f64-ok", jaxpr=jaxpr, expect={"dtype": "float64"})
+    assert DtypeRule().check(art) == []
+
+
+# -------------------------------------------------------- baseline gate --
+def test_baseline_suppresses_known_findings(tmp_path):
+    f1 = Finding(rule="kernel-path", severity="error", artifact="a", message="m", key="missing")
+    f2 = Finding(rule="trip-count", severity="error", artifact="b", message="m")
+    allow = {f1.fingerprint}
+    new, old = split_findings([f1, f2], allow)
+    assert [x.fingerprint for x in new] == [f2.fingerprint]
+    assert [x.fingerprint for x in old] == [f1.fingerprint]
+
+    cases = [Case("solve", "match", "xla")]
+    rep = build_report(cases, [], [f1], allow)
+    assert rep["ok"] and rep["n_baselined"] == 1
+    rep = build_report(cases, [], [f1, f2], allow)
+    assert not rep["ok"] and rep["n_new_errors"] == 1
+
+    p = tmp_path / "baseline.json"
+    p.write_text('{"allow": ["kernel-path::a::missing"]}')
+    assert load_baseline(str(p)) == {"kernel-path::a::missing"}
+
+
+def test_shipped_baseline_is_empty():
+    """The tree is clean: the checked-in allowlist must stay empty."""
+    assert load_baseline() == set()
+
+
+# ------------------------------------------------------- lpserve audit --
+def test_lpserve_audit_does_not_mutate_engine():
+    from repro.lpserve import LPEngine, LPServeConfig
+
+    eng = LPEngine(LPServeConfig(lanes=4))
+    for seed in (1, 2):
+        eng.submit(problems.build("match", generators.erdos(24, 60, seed=seed)))
+    before = {k: (len(s.queue), len(s.active)) for k, s in eng._buckets.items()}
+    launches = eng.audit_launches()
+    assert launches  # at least one dispatch key assembled
+    for key, (stacked, bounds) in launches.items():
+        assert jnp.shape(bounds)[0] == 4  # padded to the lane count
+        assert jnp.shape(stacked.c)[0] == 4
+    after = {k: (len(s.queue), len(s.active)) for k, s in eng._buckets.items()}
+    assert before == after
+    # searches untouched: the engine still drains to completion
+    sols = eng.run()
+    assert len(sols) == 2
