@@ -89,9 +89,11 @@ def main() -> None:
             # benched configurations and the linted ones cannot drift.
             from repro.tracecheck.cli import run_matrix
 
-            out = Path(__file__).resolve().parents[1] / "TRACECHECK.json"
-            report = run_matrix(quick=quick, out=str(out))
-            print(f"wrote {out}", flush=True)
+            root = Path(__file__).resolve().parents[1]
+            out = root / "TRACECHECK.json"
+            cm_out = root / "COSTMODEL.json"
+            report = run_matrix(quick=quick, out=str(out), costmodel_out=str(cm_out))
+            print(f"wrote {out} and {cm_out}", flush=True)
             if not report["ok"]:
                 sys.exit(1)
         else:

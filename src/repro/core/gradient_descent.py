@@ -68,7 +68,7 @@ def mpc_solve(P: LinOp, C: LinOp, opts: MPCOptions = MPCOptions(), c_mask=None):
     """Run MPCSolver; returns (x, trace dict) with per-iteration violation."""
     m = P.shape[0] + C.shape[0]
     n = P.shape[1]
-    dt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    dt = jnp.result_type(float)  # canonical float: f64 iff x64 is enabled
 
     # start tiny like MWU so packing starts satisfied
     cm = P.colmax().astype(dt)

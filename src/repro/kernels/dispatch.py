@@ -186,7 +186,8 @@ def _gate(op: str, policy: KernelPolicy, n: int, dtype) -> str:
     """Per-op feasibility of the pallas path, from static shape/dtype."""
     if policy.backend != "pallas":
         return "xla"
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.float64) and not policy.interpret:
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating) and dt.itemsize >= 8 and not policy.interpret:
         return "xla"  # real TPUs have no f64 vector unit
     if op == "gather" and n > vmem_vertex_limit(dtype):
         return "xla"  # w no longer fits VMEM single-block

@@ -13,22 +13,37 @@ from .kernel import flash_attention_pallas
 from .ref import flash_attention_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "impl"))
 def flash_attention(q, k, v, positions=None, *, causal=True, window=None,
                     block_q=512, block_k=512, impl="auto"):
-    """q: (B,S,Hq,dh), k/v: (B,S,Hkv,dh) -> (B,S,Hq,dh)."""
+    """q: (B,S,Hq,dh), k/v: (B,S,Hkv,dh) -> (B,S,Hq,dh).
+
+    Backend resolution happens here, host-side, before the jit boundary:
+    a ``jax.default_backend()`` read inside the jitted body would be
+    frozen into the jit cache at first trace and served stale after a
+    device switch (RPR001 — same contract as ``kernels.dispatch.resolve``).
+    """
+    platform = jax.default_backend()
+    if impl == "auto":
+        impl = "pallas" if platform == "tpu" else "xla"
+    return _flash_attention_impl(
+        q, k, v, positions, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, impl=impl,
+        interpret=platform != "tpu",
+    )
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "impl", "interpret"))
+def _flash_attention_impl(q, k, v, positions=None, *, causal, window,
+                          block_q, block_k, impl, interpret):
     B, S, Hq, dh = q.shape
     Hkv = k.shape[2]
     g = Hq // Hkv
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
 
     qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(B * Hq, S, dh)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(B * Hq, S, dh)
 
     if impl == "pallas":
-        interpret = jax.default_backend() != "tpu"
         bq = min(block_q, S)
         bk = min(block_k, S)
         pad_q = (bq - S % bq) % bq

@@ -1,36 +1,59 @@
-"""Static jaxpr/HLO analysis gate for the solver's performance invariants.
+"""Static analysis gate for the solver's performance invariants.
 
 The paper's speedups live or die on per-iteration primitive cost: fused
 vector kernels on the hot path, no host round-trips inside the MWU
 ``while`` loop, exactly the declared collectives per pod plan, a dtype
 that never silently widens. ``repro.tracecheck`` checks all of that
-*statically* — it lowers every hot entry point (``Solver.solve`` /
-``solve_batch`` per family, lpserve dispatch keys, ``DistSolver`` mesh
-plans, each Pallas kernel), inspects the jaxpr and optionally the
-compiled HLO, and fails CI when an invariant regresses.
+*statically*, in three passes:
+
+1. **AST lint** (:mod:`.astlint`, ``--ast``) — source-level RPR rule
+   codes catching the patterns that *produce* trace regressions
+   (backend reads inside jitted bodies, Python branches on tracers,
+   hard-coded f64, stray io_callbacks, unhashable static args, raw
+   DeprecationWarnings). Pure stdlib, runs in the dependency-free lint
+   CI step; suppression is per line (``# repro: noqa[RPR00x]``).
+2. **trace rules + jaxpr parity** (:mod:`.rules`, :mod:`.diff`,
+   ``--matrix``) — lowers every hot entry point (``Solver.solve`` /
+   ``solve_batch`` per family, lpserve dispatch keys, ``DistSolver``
+   mesh plans, each Pallas kernel), lints jaxpr + compiled HLO, and
+   *proves* the two parity contracts differentially: pallas-vs-xla
+   traces differ only inside dispatched kernel regions, and an
+   identity-plan ``DistSolver`` trace is op-for-op the plain ``Solver``
+   trace.
+3. **cost model** (:mod:`.costmodel`) — static per-iteration
+   FLOP/HBM-byte/collective counters of every compiled cell, extracted
+   from the top-level while body and gated against the committed
+   ``costmodel_baseline.json`` with relative tolerances
+   (``COSTMODEL.json`` artifact).
 
 Layout:
 
+* :mod:`.astlint`    — stdlib AST lint (RPR001–RPR006);
 * :mod:`.hlo_ir`     — shared textual-HLO parser (also feeds
   :mod:`repro.utils.hlo`'s roofline analyzer);
 * :mod:`.jaxpr_scan` — recursive jaxpr walkers with while-loop scoping;
 * :mod:`.rules`      — ``Rule`` / ``Finding`` framework + the six
   default rules (see its docstring for the rule set and how to add one);
+* :mod:`.diff`       — canonicalized jaxpr differ + the parity checks;
+* :mod:`.costmodel`  — per-iteration cost cells + baseline gate;
 * :mod:`.capture`    — AOT capture of each entry point via the solver
   lowering hooks (nothing is executed);
 * :mod:`.matrix`     — the family × backend × mesh-plan sweep, shared
   with ``benchmarks/run.py``;
-* :mod:`.report`     — baseline allowlist + ``TRACECHECK.json``;
-* CLI: ``python -m repro.tracecheck --matrix`` (see ``--help``).
+* :mod:`.report`     — baseline allowlist + ``TRACECHECK.json`` +
+  ``--prune-baseline``;
+* CLI: ``python -m repro.tracecheck --matrix`` / ``--ast`` (see
+  ``--help``) and ``tracecheck/README.md`` for the full rule catalog.
 
 Intentional deviations are recorded per-fingerprint in
 ``baseline.json`` (``{"allow": ["rule::artifact::key", ...]}``) rather
 than by disabling rules — see :mod:`.report`.
 
-Heavy submodules (capture pulls in api/dist/lpserve and jax) are
-imported lazily; importing :mod:`repro.tracecheck` itself stays cheap.
+Everything importing jax (rules/capture/diff) loads lazily via PEP 562
+so ``import repro.tracecheck`` — and the ``--ast`` CLI path — works in
+environments without jax installed.
 """
-from .rules import ERROR, WARNING, Finding, Rule, TraceArtifact, run_rules
+from __future__ import annotations
 
 __all__ = [
     "ERROR",
@@ -40,3 +63,11 @@ __all__ = [
     "TraceArtifact",
     "run_rules",
 ]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from . import rules
+
+        return getattr(rules, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

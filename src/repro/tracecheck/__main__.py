@@ -1,13 +1,21 @@
-"""CLI entry: ``python -m repro.tracecheck --matrix``.
+"""CLI entry: ``python -m repro.tracecheck --matrix`` / ``--ast``.
 
 Device fabrication (``--devices N``) must happen before jax initializes
 its backend, so this module parses argv and sets XLA_FLAGS *before*
 importing anything that imports jax (capture/rules). CI runs::
 
-    python -m repro.tracecheck --matrix --devices 8 --out TRACECHECK.json
+    python -m repro.tracecheck --ast                     # fast, no jax tracing
+    python -m repro.tracecheck --matrix --devices 8 \\
+        --out TRACECHECK.json --costmodel-out COSTMODEL.json
+
+``--ast`` lints the source tree (stdlib only — :mod:`.astlint` never
+imports jax, and the package ``__init__`` is lazy, so this path works
+in the dependency-free ruff job too; that job may equivalently execute
+``src/repro/tracecheck/astlint.py`` directly).
 
 Exit status is 0 iff no error-severity finding is missing from the
-baseline allowlist (see :mod:`repro.tracecheck.report`).
+baseline allowlist (see :mod:`repro.tracecheck.report`); ``--ast`` exits
+nonzero on any unsuppressed finding (no baseline for source lint).
 """
 from __future__ import annotations
 
@@ -19,13 +27,37 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.tracecheck",
-        description="static jaxpr/HLO lint of the solver's performance invariants",
+        description="static jaxpr/HLO/source analysis of the solver's performance invariants",
     )
     ap.add_argument("--matrix", action="store_true", help="run the default case sweep")
+    ap.add_argument(
+        "--ast",
+        nargs="*",
+        default=None,
+        metavar="PATH",
+        help="AST source lint (RPR rule codes); default path: the repro package",
+    )
     ap.add_argument("--quick", action="store_true", help="trimmed sweep, no HLO compiles")
     ap.add_argument("--list", action="store_true", help="print the case names and exit")
     ap.add_argument("--out", default=None, metavar="PATH", help="write TRACECHECK.json here")
+    ap.add_argument(
+        "--costmodel-out", default=None, metavar="PATH", help="write COSTMODEL.json here"
+    )
     ap.add_argument("--baseline", default=None, metavar="PATH", help="allowlist file override")
+    ap.add_argument(
+        "--cost-baseline", default=None, metavar="PATH",
+        help="cost baseline file override (default: costmodel_baseline.json)",
+    )
+    ap.add_argument(
+        "--update-cost-baseline",
+        action="store_true",
+        help="rewrite the per-iteration cost baseline from this run's cells",
+    )
+    ap.add_argument(
+        "--prune-baseline",
+        action="store_true",
+        help="drop baseline fingerprints that no longer fire (prints removals)",
+    )
     ap.add_argument(
         "--devices",
         type=int,
@@ -35,6 +67,17 @@ def main(argv=None) -> int:
     )
     args = ap.parse_args(argv)
 
+    if args.ast is not None:
+        # stdlib-only path: never touches jax
+        from . import astlint
+
+        paths = args.ast or [os.path.dirname(os.path.dirname(os.path.abspath(__file__)))]
+        findings = astlint.lint_paths(paths)
+        print(astlint.format_findings(findings))
+        if findings:
+            return 1
+        if not args.matrix:
+            return 0
     if args.list:
         from .matrix import default_matrix
 
@@ -51,7 +94,15 @@ def main(argv=None) -> int:
 
     from .cli import run_matrix
 
-    report = run_matrix(quick=args.quick, baseline=args.baseline, out=args.out)
+    report = run_matrix(
+        quick=args.quick,
+        baseline=args.baseline,
+        out=args.out,
+        costmodel_out=args.costmodel_out,
+        cost_baseline=args.cost_baseline,
+        update_cost_baseline=args.update_cost_baseline,
+        prune=args.prune_baseline,
+    )
     return 0 if report["ok"] else 1
 
 

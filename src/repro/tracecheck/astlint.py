@@ -1,0 +1,545 @@
+"""AST trace-safety lint over the repo source (the RPR rule codes).
+
+The jaxpr/HLO passes in :mod:`.rules` lint *captured programs*; this
+module lints the *source tree itself* for the coding patterns that
+produce those regressions in the first place — so the fast pre-jax CI
+step (and the ruff lint job, which has no jax installed) can reject a
+bad diff in seconds. Pure stdlib: importing this module must never pull
+in jax.
+
+Rule codes (each is one way a trace silently goes wrong):
+
+``RPR001``  ``jax.default_backend()`` / ``os.environ`` reads inside a
+            traced function — the value is frozen into the jit cache at
+            first trace and goes stale when the device set or env
+            changes. Resolve host-side and pass the result through as a
+            static argument (``kernels.dispatch.resolve``).
+``RPR002``  Python ``if``/``while`` branching on a traced function's
+            argument (or a value derived from one) — a tracer has no
+            truth value at runtime; use ``lax.cond`` / ``jnp.where`` or
+            declare the argument static.
+``RPR003``  bare ``float64`` dtype literals in kernel / core / model
+            modules — the solver is dtype-generic via promotion rules;
+            a hard-coded f64 literal widens every downstream op (use
+            ``jnp.result_type`` / ``jnp.promote_types``).
+``RPR004``  ``io_callback`` outside the sanctioned ``Solver`` trace hook
+            (:mod:`repro.core.mwu`) — every other in-loop host callback
+            is a per-iteration device stall the no-callbacks rule will
+            reject at trace time anyway.
+``RPR005``  a literal list/dict/set passed for a parameter declared in
+            ``static_argnames`` of a module-local jitted function —
+            static args must be hashable; the call raises (or worse,
+            retraces per call when wrapped).
+``RPR006``  ``warnings.warn(..., DeprecationWarning)`` outside
+            :mod:`repro.utils.deprecation` — deprecations must funnel
+            through ``warn_once`` so long-running processes warn once
+            per shim, not once per call.
+
+Suppression is per line: append ``# repro: noqa[RPR001]`` (one or more
+comma-separated codes) to the flagged line. There is deliberately *no*
+fingerprint baseline for this pass — a source-level violation is either
+fixed or annotated where it stands.
+
+CLI: ``python -m repro.tracecheck --ast [paths...]`` (default:
+``src/repro``); exits nonzero on any unsuppressed finding.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+
+__all__ = [
+    "RPR_RULES",
+    "AstFinding",
+    "lint_source",
+    "lint_file",
+    "lint_paths",
+    "format_findings",
+]
+
+RPR_RULES = {
+    "RPR001": "backend/env read inside a traced function",
+    "RPR002": "Python branch on a traced value",
+    "RPR003": "bare float64 literal in kernel/core/model module",
+    "RPR004": "io_callback outside the sanctioned trace hook",
+    "RPR005": "unhashable literal passed as a jit static argument",
+    "RPR006": "DeprecationWarning not routed through utils.deprecation.warn_once",
+}
+
+# modules allowed to contain what a rule forbids elsewhere
+_RPR003_SCOPES = ("kernels", "core", "models")  # package dirs under repro
+_RPR004_SANCTIONED = ("core/mwu.py", "core\\mwu.py")
+_RPR006_SANCTIONED = ("utils/deprecation.py", "utils\\deprecation.py")
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Z0-9, ]+)\]")
+
+# names whose call argument becomes a traced function body
+_TRACE_CONSUMERS = {
+    "while_loop", "fori_loop", "scan", "cond", "switch", "map",
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "custom_vmap", "shard_map", "associative_scan",
+}
+# decorator heads that make the decorated function traced
+_TRACE_DECORATORS = {"jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint", "remat", "custom_vmap"}
+
+
+@dataclass
+class AstFinding:
+    """One source-level rule violation (pre-jax sibling of rules.Finding)."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        sym = self.symbol or f"L{self.line}"
+        return f"{self.code}::{self.path}::{sym}"
+
+    def as_dict(self) -> dict:
+        return {
+            "code": self.code,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "fingerprint": self.fingerprint,
+        }
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain ('' when not a plain chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _tail(chain: str) -> str:
+    return chain.rsplit(".", 1)[-1] if chain else ""
+
+
+def _is_env_read(node: ast.AST) -> bool:
+    """os.environ[...] / os.environ.get(...) / os.getenv(...) / jax.default_backend()."""
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        if chain.endswith("os.getenv") or chain == "getenv":
+            return True
+        if chain.endswith("environ.get"):
+            return True
+        if chain.endswith("default_backend"):
+            return True
+    if isinstance(node, ast.Subscript):
+        chain = _attr_chain(node.value)
+        if chain.endswith("os.environ") or chain == "environ":
+            return True
+    return False
+
+
+def _decorator_is_traced(dec: ast.AST) -> bool:
+    """@jax.jit, @jit, @partial(jax.jit, ...), @jax.custom_batching.custom_vmap ..."""
+    if isinstance(dec, ast.Call):
+        head = _attr_chain(dec.func)
+        if _tail(head) == "partial" and dec.args:
+            return _decorator_is_traced(dec.args[0])
+        return _tail(head) in _TRACE_DECORATORS
+    return _tail(_attr_chain(dec)) in _TRACE_DECORATORS
+
+
+class _FunctionInfo:
+    """One function scope: its node, whether it is proven traced, children."""
+
+    def __init__(self, node, parent=None):
+        self.node = node
+        self.parent = parent
+        self.traced = any(_decorator_is_traced(d) for d in getattr(node, "decorator_list", ()))
+        # params declared static at the jit decorator: branching on them
+        # is host-side control flow, not a tracer branch (RPR002 exempt)
+        self.static_params: set[str] = set()
+        for d in getattr(node, "decorator_list", ()):
+            self.static_params |= _Linter._jit_static_names(d)
+        self.children: dict[str, _FunctionInfo] = {}
+
+    def mark_traced(self):
+        if not self.traced:
+            self.traced = True
+            # everything defined inside a traced function traces with it
+            for ch in self.children.values():
+                ch.mark_traced()
+
+    def effective_traced(self) -> bool:
+        info = self
+        while info is not None:
+            if info.traced:
+                return True
+            info = info.parent
+        return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.findings: list[AstFinding] = []
+        self.scope: _FunctionInfo | None = None
+        self.scopes: list[_FunctionInfo] = []
+        # RPR005: module-local jitted callables -> their static argnames
+        self.static_argnames: dict[str, set[str]] = {}
+        self.noqa = self._noqa_lines(source)
+        parts = self.rel.split("/")
+        self.in_rpr003_scope = any(p in _RPR003_SCOPES for p in parts)
+        self.rpr004_ok = any(self.rel.endswith(s.replace("\\", "/")) for s in _RPR004_SANCTIONED)
+        self.rpr006_ok = any(self.rel.endswith(s.replace("\\", "/")) for s in _RPR006_SANCTIONED)
+
+    @staticmethod
+    def _noqa_lines(source: str) -> dict[int, set[str]]:
+        out: dict[int, set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _NOQA_RE.search(line)
+            if m:
+                out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        return out
+
+    def emit(self, code: str, node: ast.AST, message: str, symbol: str = ""):
+        line = getattr(node, "lineno", 0)
+        allowed = self.noqa.get(line, ())
+        if code in allowed:
+            return
+        self.findings.append(AstFinding(
+            code=code, path=self.rel, line=line,
+            col=getattr(node, "col_offset", 0), message=message, symbol=symbol,
+        ))
+
+    # -- scope bookkeeping -------------------------------------------------
+    def _qualname(self) -> str:
+        names = []
+        info = self.scope
+        while info is not None:
+            names.append(info.node.name if hasattr(info.node, "name") else "<lambda>")
+            info = info.parent
+        return ".".join(reversed(names))
+
+    def _enter_function(self, node):
+        info = _FunctionInfo(node, parent=self.scope)
+        if self.scope is not None and hasattr(node, "name"):
+            self.scope.children[node.name] = info
+        self.scopes.append(info)
+        prev, self.scope = self.scope, info
+        self._collect_static_argnames(node)
+        self.generic_visit(node)
+        self.scope = prev
+
+    def visit_FunctionDef(self, node):
+        self._enter_function(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._enter_function(node)
+
+    def visit_Lambda(self, node):
+        info = _FunctionInfo(node, parent=self.scope)
+        self.scopes.append(info)
+        prev, self.scope = self.scope, info
+        self.generic_visit(node)
+        self.scope = prev
+
+    # -- traced-ness propagation ------------------------------------------
+    def visit_Call(self, node):
+        head = _tail(_attr_chain(node.func))
+        if head in _TRACE_CONSUMERS and self.scope is not None:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name) and arg.id in self.scope.children:
+                    self.scope.children[arg.id].mark_traced()
+                elif isinstance(arg, ast.Lambda):
+                    pass  # visited as its own scope; lambdas passed to
+                    # trace consumers are rarely backend-reading — skip
+        self._check_rpr004(node)
+        self._check_rpr006(node)
+        self._check_rpr005_call(node)
+        self.generic_visit(node)
+
+    # -- the per-function checks ------------------------------------------
+    def finish(self):
+        """Emit RPR001/RPR002 once the whole module has been walked.
+
+        Traced-ness of a locally-defined function is discovered at its
+        *use site* in the enclosing scope (passed to while_loop/jit/...),
+        which may come before or after the def statement — so these two
+        rules run as a second pass over the recorded scopes instead of
+        during the visit.
+        """
+        for info in self.scopes:
+            if not info.effective_traced():
+                continue
+            node = info.node
+            name = getattr(node, "name", "<lambda>")
+            own = list(self._walk_own(node))
+            tainted = {a.arg for a in self._params(node)} - info.static_params
+            for stmt in own:
+                if isinstance(stmt, ast.Assign):
+                    if self._expr_tainted(stmt.value, tainted):
+                        for tgt in stmt.targets:
+                            for n in ast.walk(tgt):
+                                if isinstance(n, ast.Name):
+                                    tainted.add(n.id)
+                elif isinstance(stmt, ast.AugAssign):
+                    if self._expr_tainted(stmt.value, tainted) and isinstance(stmt.target, ast.Name):
+                        tainted.add(stmt.target.id)
+            for sub in own:
+                if _is_env_read(sub):
+                    self.emit(
+                        "RPR001", sub,
+                        f"backend/env read inside traced function `{name}` — "
+                        "resolve host-side and pass through as a static arg "
+                        "(kernels.dispatch.resolve)",
+                        symbol=name,
+                    )
+                if isinstance(sub, (ast.If, ast.While)) and self._branches_on_tracer(sub.test, tainted):
+                    self.emit(
+                        "RPR002", sub,
+                        f"Python `{'if' if isinstance(sub, ast.If) else 'while'}` on a "
+                        f"traced value inside `{name}` — use lax.cond/jnp.where or "
+                        "declare the argument static",
+                        symbol=name,
+                    )
+
+    @classmethod
+    def _walk_own(cls, root) -> "list[ast.AST]":
+        """Walk a function's own body, stopping at nested function scopes
+        (each nested scope is linted as its own entry in ``self.scopes``,
+        inheriting traced-ness via ``effective_traced``)."""
+        out: list[ast.AST] = []
+        stack = list(ast.iter_child_nodes(root))
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            stack.extend(ast.iter_child_nodes(n))
+        return out
+
+    @staticmethod
+    def _params(node) -> list:
+        args = node.args
+        return list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+
+    # attribute reads on a tracer that are static python values — values
+    # derived from them are host-side, not traced
+    _STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "aval", "itemsize", "name"})
+
+    @classmethod
+    def _expr_tainted(cls, expr: ast.AST, tainted: set[str]) -> bool:
+        stack = [expr]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, ast.Attribute) and n.attr in cls._STATIC_ATTRS:
+                continue  # x.shape etc. is static even when x is a tracer
+            if isinstance(n, ast.Name) and n.id in tainted:
+                return True
+            stack.extend(ast.iter_child_nodes(n))
+        return False
+
+    def _branches_on_tracer(self, test: ast.AST, tainted: set[str]) -> bool:
+        # `x is None` / isinstance / hasattr tests are host-side idioms
+        # even on traced args (None-vs-array plumbing) — not violations.
+        if isinstance(test, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+        ):
+            return False
+        if isinstance(test, ast.Call) and _tail(_attr_chain(test.func)) in (
+            "isinstance", "hasattr", "callable", "len",
+        ):
+            return False
+        if isinstance(test, ast.BoolOp):
+            return any(self._branches_on_tracer(v, tainted) for v in test.values)
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._branches_on_tracer(test.operand, tainted)
+        return self._expr_tainted(test, tainted)
+
+    # -- RPR003: bare float64 literals ------------------------------------
+    def visit_Attribute(self, node):
+        if self.in_rpr003_scope and node.attr == "float64":
+            chain = _attr_chain(node)
+            if chain in ("jnp.float64", "np.float64", "numpy.float64", "jax.numpy.float64"):
+                self.emit(
+                    "RPR003", node,
+                    f"bare `{chain}` literal — derive the wide dtype from the "
+                    "inputs (jnp.result_type/jnp.promote_types) so the solver "
+                    "stays dtype-generic",
+                )
+        self.generic_visit(node)
+
+    def visit_Constant(self, node):
+        if self.in_rpr003_scope and node.value == "float64" and isinstance(node.value, str):
+            self.emit(
+                "RPR003", node,
+                "bare 'float64' dtype string — derive the dtype from the inputs",
+            )
+        self.generic_visit(node)
+
+    # -- RPR004 / RPR006 ---------------------------------------------------
+    def _check_rpr004(self, node: ast.Call):
+        if self.rpr004_ok:
+            return
+        if _tail(_attr_chain(node.func)) == "io_callback":
+            self.emit(
+                "RPR004", node,
+                "io_callback outside the sanctioned Solver trace hook "
+                "(repro.core.mwu) — in-loop host callbacks stall the device "
+                "every MWU iteration",
+                symbol=self._qualname(),
+            )
+
+    def _check_rpr006(self, node: ast.Call):
+        if self.rpr006_ok:
+            return
+        if _tail(_attr_chain(node.func)) != "warn":
+            return
+        chain = _attr_chain(node.func)
+        if chain not in ("warnings.warn", "warn"):
+            return
+        refs = list(node.args) + [kw.value for kw in node.keywords]
+        for arg in refs:
+            for n in ast.walk(arg):
+                if isinstance(n, (ast.Name, ast.Attribute)) and _tail(_attr_chain(n)) == "DeprecationWarning":
+                    self.emit(
+                        "RPR006", node,
+                        "DeprecationWarning raised directly — route through "
+                        "utils.deprecation.warn_once so it fires once per process",
+                        symbol=self._qualname(),
+                    )
+                    return
+
+    # -- RPR005: static-arg hashability ------------------------------------
+    def _collect_static_argnames(self, node):
+        """Record `@partial(jax.jit, static_argnames=...)`-style functions."""
+        for dec in getattr(node, "decorator_list", ()):
+            names = self._jit_static_names(dec)
+            if names:
+                self.static_argnames[node.name] = names
+
+    @staticmethod
+    def _jit_static_names(call: ast.AST) -> set[str]:
+        if not isinstance(call, ast.Call):
+            return set()
+        head = _tail(_attr_chain(call.func))
+        inner_is_jit = head in ("jit", "pjit")
+        if head == "partial" and call.args:
+            inner_is_jit = _tail(_attr_chain(call.args[0])) in ("jit", "pjit")
+        if not inner_is_jit:
+            return set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names: set[str] = set()
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    names.add(v.value)
+                elif isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+                    for el in v.elts:
+                        if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                            names.add(el.value)
+                return names
+        return set()
+
+    def visit_Assign(self, node):
+        # f = jax.jit(g, static_argnames=(...)) at any scope
+        names = self._jit_static_names(node.value)
+        if names:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.static_argnames[tgt.id] = names
+        self.generic_visit(node)
+
+    _MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)
+
+    def _check_rpr005_call(self, node: ast.Call):
+        fname = None
+        if isinstance(node.func, ast.Name):
+            fname = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            fname = node.func.attr
+        statics = self.static_argnames.get(fname or "", None)
+        if not statics:
+            return
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, self._MUTABLE_LITERALS):
+                self.emit(
+                    "RPR005", kw.value,
+                    f"unhashable {type(kw.value).__name__.lower()} literal passed for "
+                    f"static argument `{kw.arg}` of jitted `{fname}` — static args "
+                    "must be hashable (tuple / frozen dataclass)",
+                    symbol=fname,
+                )
+
+
+def lint_source(source: str, rel_path: str, path: str = "") -> list[AstFinding]:
+    """Lint one module's source text; ``rel_path`` keys the scope rules."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [AstFinding(
+            code="RPR000", path=rel_path.replace(os.sep, "/"),
+            line=exc.lineno or 0, col=exc.offset or 0,
+            message=f"syntax error: {exc.msg}",
+        )]
+    linter = _Linter(path or rel_path, rel_path, source)
+    linter.visit(tree)
+    linter.finish()
+    return sorted(linter.findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def lint_file(path: str, root: str | None = None) -> list[AstFinding]:
+    rel = os.path.relpath(path, root) if root else path
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), rel, path)
+
+
+def lint_paths(paths: list[str]) -> list[AstFinding]:
+    """Lint every ``.py`` under each path (files are linted directly)."""
+    findings: list[AstFinding] = []
+    for p in paths:
+        if os.path.isfile(p):
+            findings.extend(lint_file(p, root=os.path.dirname(p) or "."))
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    findings.extend(lint_file(os.path.join(dirpath, fn), root=p))
+    return findings
+
+
+def format_findings(findings: list[AstFinding]) -> str:
+    if not findings:
+        return "astlint: clean"
+    lines = [
+        f"{f.path}:{f.line}:{f.col}: {f.code} {f.message}" for f in findings
+    ]
+    lines.append(f"astlint: {len(findings)} finding(s)")
+    return "\n".join(lines)
+
+
+def main(paths: list[str] | None = None) -> int:
+    """Entry point shared by ``--ast`` and direct execution.
+
+    ``python src/repro/tracecheck/astlint.py [paths...]`` works without
+    the package being importable — the ruff CI step has no jax installed
+    and runs this file directly.
+    """
+    findings = lint_paths(paths or ["src/repro"])
+    print(format_findings(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    import sys
+
+    sys.exit(main(sys.argv[1:] or None))

@@ -138,9 +138,16 @@ def capture_case(case) -> TraceArtifact | None:
         if plan.n_devices > len(jax.devices()):
             return None
         solver = DistSolver(opts, plan=plan)
-        bounds = _batch_bounds(problem, plan.data)
+        # identity plans use the same batch width as the solve_batch
+        # cells so the jaxpr parity prover can diff the two traces
+        # op-for-op; sharded plans keep B == data (no-vmap fast path)
+        width = 2 if plan.n_devices == 1 else plan.data
+        bounds = _batch_bounds(problem, width)
         mode = pod_mode(problem) if plan.pod > 1 else None
         jaxpr = solver.jaxpr_batch(problem, bounds)
+        hlo_text = None
+        if case.hlo:
+            hlo_text = solver.lower_batch(problem, bounds).compile().as_text()
         # B == data puts multi-device plans on the no-vmap fast path, so
         # the kernel pack stays active there; identity plans vmap.
         no_vmap = plan.n_devices > 1
@@ -150,8 +157,8 @@ def capture_case(case) -> TraceArtifact | None:
             collectives=_POD_COLLECTIVES if plan.pod > 1 else None,
         )
         return TraceArtifact(
-            name=case.name, jaxpr=jaxpr, policy=policy, opts=opts,
-            plan=plan, pod_mode=mode, expect=expect,
+            name=case.name, jaxpr=jaxpr, hlo_text=hlo_text, policy=policy,
+            opts=opts, plan=plan, pod_mode=mode, expect=expect,
         )
 
     if case.entry == "lpserve":

@@ -1,18 +1,81 @@
 """Programmatic runner behind ``python -m repro.tracecheck``.
 
-:func:`run_matrix` captures every case, applies the rule set and builds
-the report dict; :mod:`.__main__` wraps it in argument parsing and the
-exit code. ``benchmarks/run.py``'s ``tracecheck`` section calls
-:func:`run_matrix` directly so the bench driver and the lint gate share
-one matrix definition (:func:`repro.tracecheck.matrix.default_matrix`).
+:func:`run_matrix` captures every case, applies the three analysis
+passes and builds the report dict; :mod:`.__main__` wraps it in argument
+parsing and the exit code. ``benchmarks/run.py``'s ``tracecheck``
+section calls :func:`run_matrix` directly so the bench driver and the
+lint gate share one matrix definition
+(:func:`repro.tracecheck.matrix.default_matrix`).
+
+The passes, in order:
+
+1. **rules** — the per-artifact jaxpr/HLO invariants (:mod:`.rules`);
+2. **parity** — differential jaxpr proofs (:mod:`.diff`): pallas-vs-xla
+   ``solve`` traces per family, and identity-plan ``DistSolver`` vs
+   plain ``Solver`` ``solve_batch`` traces per family, paired from the
+   already-captured artifacts;
+3. **costmodel** — per-iteration FLOP/byte/collective counters of every
+   compiled cell against the committed baseline (:mod:`.costmodel`).
+
+A capture hook that raises does not abort the sweep: the failed cell
+becomes an error finding naming the family / backend / mesh plan (rule
+``capture-error``) and the remaining artifacts are still linted.
 """
 from __future__ import annotations
 
 from .matrix import Case, default_matrix
-from .report import build_report, load_baseline, summarize, write_report
+from .report import build_report, load_baseline, prune_baseline, summarize, write_report
 from .rules import run_rules
 
-__all__ = ["run_matrix"]
+__all__ = ["run_matrix", "CAPTURE_RULE"]
+
+CAPTURE_RULE = "capture-error"
+
+
+def _capture_finding(case, exc):
+    from .rules import ERROR, Finding
+
+    bits = [f"family `{case.family or '-'}`", f"backend `{case.backend}`"]
+    if case.entry == "dist":
+        bits.append(f"mesh plan pod{case.pod}x{case.data}")
+    return Finding(
+        rule=CAPTURE_RULE, severity=ERROR, artifact=case.name, key=type(exc).__name__,
+        message=(
+            f"capture of `{case.entry}` ({', '.join(bits)}) raised "
+            f"{type(exc).__name__}: {exc} — the entry point no longer lowers; "
+            "remaining artifacts were still linted"
+        ),
+        detail={"entry": case.entry, "family": case.family,
+                "backend": case.backend, "pod": case.pod, "data": case.data,
+                "error": f"{type(exc).__name__}: {exc}"},
+    )
+
+
+def _parity_findings(artifacts):
+    """Differential jaxpr proofs over the captured artifact pairs."""
+    from .diff import check_backend_parity, check_dist_identity
+
+    by_name = {a.name: a for a in artifacts}
+    findings = []
+    fams = []
+    for a in artifacts:
+        parts = a.name.split(":")
+        if parts[0] == "solve" and len(parts) == 3 and parts[1] not in fams:
+            fams.append(parts[1])
+    for fam in fams:
+        ax = by_name.get(f"solve:{fam}:xla")
+        ap = by_name.get(f"solve:{fam}:pallas")
+        if ax is not None and ap is not None and ax.jaxpr is not None and ap.jaxpr is not None:
+            findings.extend(
+                check_backend_parity(ax.jaxpr, ap.jaxpr, f"parity:{fam}:backend")
+            )
+        ab = by_name.get(f"solve_batch:{fam}:xla")
+        ad = by_name.get(f"dist:{fam}:xla:pod1x1")
+        if ab is not None and ad is not None and ab.jaxpr is not None and ad.jaxpr is not None:
+            findings.extend(
+                check_dist_identity(ab.jaxpr, ad.jaxpr, f"parity:{fam}:dist")
+            )
+    return findings
 
 
 def run_matrix(
@@ -21,6 +84,10 @@ def run_matrix(
     quick: bool = False,
     baseline: str | None = None,
     out: str | None = None,
+    costmodel_out: str | None = None,
+    cost_baseline: str | None = None,
+    update_cost_baseline: bool = False,
+    prune: bool = False,
     verbose: bool = True,
 ) -> dict:
     """Capture + lint the sweep; returns the report dict (see ``ok`` key).
@@ -28,23 +95,54 @@ def run_matrix(
     Cases whose mesh plan needs more devices than the process has are
     reported under ``skipped`` rather than failing — CI fabricates
     devices via ``--devices`` / XLA_FLAGS, single-device runs still lint
-    everything else.
+    everything else. ``update_cost_baseline`` rewrites the committed
+    per-iteration cost baseline from this run's cells instead of gating
+    against it; ``prune`` drops baseline-allowlist fingerprints that no
+    longer fire.
     """
+    from . import costmodel as _cm
     from .capture import capture_case  # imports jax: keep lazy for --devices
 
     cases = default_matrix(quick=quick) if cases is None else cases
     artifacts = []
     skipped = []
+    findings = []
     for case in cases:
-        got = capture_case(case)
+        try:
+            got = capture_case(case)
+        except Exception as exc:  # noqa: BLE001 - any lowering failure is the finding
+            findings.append(_capture_finding(case, exc))
+            continue
         if got is None:
             skipped.append(case.name)
             continue
         artifacts.extend(got if isinstance(got, list) else [got])
 
-    findings = run_rules(artifacts)
+    findings.extend(run_rules(artifacts))
+    findings.extend(_parity_findings(artifacts))
+
+    cells = _cm.cost_cells(artifacts)
+    if update_cost_baseline:
+        path = _cm.write_cost_baseline(cells, cost_baseline)
+        if verbose:
+            print(f"costmodel: baseline rewritten with {len(cells)} cell(s) at {path}")
+    cost_base = _cm.load_cost_baseline(cost_baseline)
+    cost_findings = _cm.check_costs(cells, cost_base)
+    findings.extend(cost_findings)
+    if costmodel_out:
+        write_report(_cm.build_costmodel_report(cells, cost_base, cost_findings), costmodel_out)
+
     allow = load_baseline(baseline)
     report = build_report(cases, artifacts, findings, allow, skipped=skipped)
+    report["cost_cells"] = sorted(cells)
+    if prune:
+        removed = prune_baseline(findings, baseline)
+        report["pruned"] = removed
+        if verbose:
+            for fp in removed:
+                print(f"pruned stale baseline fingerprint: {fp}")
+            if not removed:
+                print("baseline: nothing to prune")
     if out:
         write_report(report, out)
     if verbose:

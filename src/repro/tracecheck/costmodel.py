@@ -1,0 +1,193 @@
+"""Static per-iteration cost gate: FLOPs / HBM bytes / collectives.
+
+The paper's scaling claims are per-iteration claims: one MWU step costs
+O(nnz) work, O(state) memory traffic and exactly the pod plan's
+collectives. The runtime benches measure that end to end, but only on
+the hardware they run on; this pass recovers the same three counters
+*statically* from the compiled program, so a diff that inflates the
+per-iteration cost fails CI before anything executes.
+
+How a cell is costed: parse the artifact's compiled HLO
+(:func:`repro.tracecheck.hlo_ir.parse_hlo`), locate the top-level
+``while`` loops (the MWU iteration loop; batch programs may carry one
+per sub-program), pick the heaviest body, and run the roofline
+accounting (:func:`repro.utils.hlo.analyze_hlo`) rooted at that body
+computation — counting the body **once** while still trip-multiplying
+loops nested inside it (line searches). FLOP/byte/collective tables are
+the roofline analyzer's; seconds come from
+:func:`repro.utils.roofline.static_cost_terms`, so the cost model and
+the dry-run roofline can never disagree on op costs.
+
+Gating: :data:`COSTMODEL_BASELINE` (``costmodel_baseline.json`` next to
+this module) stores the accepted per-iteration counters per artifact.
+:func:`check_costs` emits an error :class:`~repro.tracecheck.rules.Finding`
+(rule ``cost-regression``) when a counter grows past its relative
+tolerance (:data:`DEFAULT_TOLERANCES`) and a warning when a cell has no
+baseline yet (new matrix cells are recorded, not failed). Shrinking
+costs never fail — re-run ``python -m repro.tracecheck --matrix
+--update-cost-baseline`` to ratchet the baseline down after an
+optimization, and commit the file with the diff that earned it.
+
+``COSTMODEL.json`` (``--costmodel-out``) carries every cell's counters
+plus the baseline comparison for offline triage.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from . import hlo_ir
+
+__all__ = [
+    "COST_RULE",
+    "COSTMODEL_BASELINE",
+    "DEFAULT_TOLERANCES",
+    "iteration_cost",
+    "cost_cells",
+    "check_costs",
+    "load_cost_baseline",
+    "write_cost_baseline",
+    "build_costmodel_report",
+]
+
+COST_RULE = "cost-regression"
+
+COSTMODEL_BASELINE = os.path.join(os.path.dirname(__file__), "costmodel_baseline.json")
+
+# relative growth allowed per counter before the gate fails. flops and
+# bytes tolerate fusion-boundary jitter across jax/XLA versions; the
+# collective *count* is exact — one extra psum per iteration is exactly
+# the regression class the dist layer's design forbids.
+DEFAULT_TOLERANCES = {
+    "flops": 0.15,
+    "hbm_bytes": 0.25,
+    "collective_wire_bytes": 0.10,
+    "n_collectives": 0.0,
+}
+
+_METRICS = tuple(DEFAULT_TOLERANCES)
+
+
+def iteration_cost(hlo_text, num_partitions: int = 1) -> dict | None:
+    """Per-iteration counters of the heaviest top-level while body.
+
+    Returns None when the program has no top-level ``while`` (loop-free
+    kernel artifacts) — such artifacts have no per-iteration cost to
+    gate.
+    """
+    from ..utils.hlo import analyze_hlo
+    from ..utils.roofline import static_cost_terms
+
+    mod = hlo_text if hasattr(hlo_text, "comps") else hlo_ir.parse_hlo(hlo_text)
+    tops = [w for w in hlo_ir.while_ops(mod) if w["top_level"] and w["body"]]
+    if not tops:
+        return None
+    best = None
+    for w in tops:
+        rep = analyze_hlo(mod, num_partitions, root=w["body"])
+        cand = {
+            "flops": rep.flops,
+            "dot_flops": rep.dot_flops,
+            "fusion_flops": rep.fusion_flops,
+            "hbm_bytes": rep.hbm_bytes,
+            "collective_wire_bytes": rep.collective_wire_bytes,
+            "n_collectives": rep.n_collectives,
+            "trip_bound": hlo_ir.trip_count(mod.comps, w["cond"]) if w["cond"] else None,
+            "body": w["body"],
+        }
+        if best is None or (cand["flops"] + cand["hbm_bytes"]) > (
+            best["flops"] + best["hbm_bytes"]
+        ):
+            best = cand
+    best["n_top_level_whiles"] = len(tops)
+    best["roofline"] = static_cost_terms(
+        best["flops"], best["hbm_bytes"], best["collective_wire_bytes"]
+    )
+    return best
+
+
+def cost_cells(artifacts) -> dict[str, dict]:
+    """{artifact name: per-iteration counters} for compiled artifacts."""
+    cells: dict[str, dict] = {}
+    for art in artifacts:
+        if art.hlo_text is None:
+            continue
+        parts = getattr(art.plan, "n_devices", 1) if art.plan is not None else 1
+        cost = iteration_cost(art.hlo or art.hlo_text, num_partitions=parts)
+        if cost is not None:
+            cells[art.name] = cost
+    return cells
+
+
+def check_costs(cells: dict, baseline: dict, tolerances: dict | None = None) -> list:
+    """Findings for cells whose counters regressed past tolerance.
+
+    One finding per (cell, counter) with key ``<counter>`` so the
+    fingerprint (``cost-regression::<cell>::<counter>``) stays stable for
+    the baseline allowlist. Cells missing from the cost baseline warn —
+    a brand-new matrix cell is recorded by regenerating the baseline,
+    not silently gated against nothing.
+    """
+    from .rules import ERROR, WARNING, Finding
+
+    tolerances = DEFAULT_TOLERANCES if tolerances is None else tolerances
+    findings: list[Finding] = []
+    for name in sorted(cells):
+        cost = cells[name]
+        base = baseline.get(name)
+        if base is None:
+            findings.append(Finding(
+                rule=COST_RULE, severity=WARNING, artifact=name, key="missing-baseline",
+                message=(
+                    "no committed cost baseline for this cell — regenerate "
+                    "costmodel_baseline.json (--update-cost-baseline) and commit it"
+                ),
+            ))
+            continue
+        for metric, tol in tolerances.items():
+            have = float(cost.get(metric, 0.0))
+            want = float(base.get(metric, 0.0))
+            if have <= want * (1.0 + tol) + 1e-9:
+                continue
+            growth = have / want - 1.0 if want else float("inf")
+            findings.append(Finding(
+                rule=COST_RULE, severity=ERROR, artifact=name, key=metric,
+                message=(
+                    f"per-iteration {metric} grew {growth * 100:.1f}% over the "
+                    f"committed baseline ({want:.4g} -> {have:.4g}, tolerance "
+                    f"{tol * 100:.0f}%) — the static cost of one MWU step regressed"
+                ),
+                detail={"metric": metric, "baseline": want, "current": have,
+                        "tolerance": tol},
+            ))
+    return findings
+
+
+def load_cost_baseline(path: str | None = None) -> dict:
+    path = path or COSTMODEL_BASELINE
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f).get("cells", {})
+
+
+def write_cost_baseline(cells: dict, path: str | None = None) -> str:
+    """Persist the gated counters (only) of every cell as the new baseline."""
+    path = path or COSTMODEL_BASELINE
+    slim = {
+        name: {m: cost.get(m, 0) for m in _METRICS} for name, cost in sorted(cells.items())
+    }
+    with open(path, "w") as f:
+        json.dump({"cells": slim}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def build_costmodel_report(cells: dict, baseline: dict, findings) -> dict:
+    """The COSTMODEL.json payload (cells + comparison + gate verdict)."""
+    return {
+        "cells": {name: dict(cost) for name, cost in sorted(cells.items())},
+        "baseline": {name: dict(b) for name, b in sorted(baseline.items())},
+        "findings": [f.as_dict() for f in findings],
+        "ok": not any(f.severity == "error" for f in findings),
+    }

@@ -197,7 +197,7 @@ def reachable(comps: dict[str, Computation], root: str) -> set[str]:
     return seen
 
 
-def trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+def trip_count(comps: dict[str, Computation], cond_name: str) -> int | None:
     """Loop bound recovered from a ``while`` condition computation.
 
     Only integer constants on an operand path *into a compare op* count
@@ -206,8 +206,14 @@ def trip_count(comps: dict[str, Computation], cond_name: str) -> int:
     literal elsewhere in the condition — a gather dimension, an address
     constant — therefore cannot inflate the estimate, which the previous
     max-literal-anywhere heuristic allowed.
+
+    Returns ``None`` when no compare-fed constant exists (a condition
+    comparing two loop-carried values is a genuinely data-dependent
+    loop) — callers that need a multiplier must choose their own
+    fallback (``trip_count(...) or 1``) instead of this function
+    fabricating a bogus bound of 1.
     """
-    best = 1
+    best: int | None = None
     for cn in reachable(comps, cond_name):
         comp = comps[cn]
         for op in comp.ops:
@@ -225,7 +231,7 @@ def trip_count(comps: dict[str, Computation], cond_name: str) -> int:
                     continue
                 v = src.const_int()
                 if v is not None:
-                    best = max(best, v)
+                    best = v if best is None else max(best, v)
                     continue
                 stack.extend(src.operands)
     return best

@@ -46,14 +46,18 @@ def default_matrix(quick: bool = False) -> list[Case]:
     Composition:
 
     * ``solve`` per family under both backends, with compiled-HLO lint
-      on the xla cells (trip count, f64 survival, loop custom-calls);
+      on both (trip count, f64 survival, loop custom-calls on xla; the
+      pallas cells feed the per-iteration cost model so family × backend
+      cost cells exist for every family);
     * one ``solve_traced`` cell (the io_callback hook must be traced,
       and only when asked for);
     * ``solve_batch`` per family (vmapped lanes: kernel pack must be
       absent by the custom_vmap design);
-    * ``dist`` plans: identity (1,1) — bit-parity, no collectives —
-      plus pod-sharded (2,1) and data-sharded (1,2) under both backends
-      (skipped at runtime when the process has fewer devices);
+    * ``dist`` plans: identity (1,1) **per family** — the jaxpr parity
+      prover diffs each against the plain ``solve_batch`` trace — plus
+      pod-sharded (2,1) and data-sharded (1,2) under both backends
+      (skipped at runtime when the process has fewer devices; the xla
+      multi-device cells compile so the cost model sees mesh-plan cells);
     * one ``lpserve`` engine audit per backend (every (family, bucket)
       dispatch key it assembles);
     * each Pallas kernel at its dispatch-gate limit shape (VMEM rule).
@@ -64,15 +68,15 @@ def default_matrix(quick: bool = False) -> list[Case]:
 
     for fam in families:
         for backend in ("xla", "pallas"):
-            cases.append(Case("solve", fam, backend, hlo=hlo and backend == "xla"))
+            cases.append(Case("solve", fam, backend, hlo=hlo))
         cases.append(Case("solve_batch", fam, "xla", hlo=hlo and fam == families[0]))
+        cases.append(Case("dist", fam, "xla", pod=1, data=1))
     cases.append(Case("solve_batch", families[0], "pallas"))
     cases.append(Case("solve_traced", families[0], "xla"))
 
-    cases.append(Case("dist", families[0], "xla", pod=1, data=1))
     for backend in ("xla", "pallas"):
-        cases.append(Case("dist", families[0], backend, pod=2, data=1))
-        cases.append(Case("dist", families[0], backend, pod=1, data=2))
+        cases.append(Case("dist", families[0], backend, pod=2, data=1, hlo=hlo and backend == "xla"))
+        cases.append(Case("dist", families[0], backend, pod=1, data=2, hlo=hlo and backend == "xla"))
     if not quick:
         cases.append(Case("dist", "gen-match", "xla", pod=2, data=1))
 

@@ -18,6 +18,7 @@ from .rules import ERROR, Finding
 __all__ = [
     "DEFAULT_BASELINE",
     "load_baseline",
+    "prune_baseline",
     "split_findings",
     "build_report",
     "write_report",
@@ -35,6 +36,25 @@ def load_baseline(path: str | None = None) -> set[str]:
     with open(path) as f:
         data = json.load(f)
     return set(data.get("allow", []))
+
+
+def prune_baseline(findings: list[Finding], path: str | None = None) -> list[str]:
+    """Drop allowlist fingerprints that no longer fire; returns the removed.
+
+    ``--prune-baseline``: a baseline entry whose violation was fixed is
+    dead weight that would silently re-admit a future regression with
+    the same fingerprint, so the gate offers to garbage-collect them.
+    The file is rewritten only when something was actually removed.
+    """
+    path = path or DEFAULT_BASELINE
+    allow = load_baseline(path)
+    live = {f.fingerprint for f in findings}
+    removed = sorted(allow - live)
+    if removed:
+        with open(path, "w") as f:
+            json.dump({"allow": sorted(allow & live)}, f, indent=2)
+            f.write("\n")
+    return removed
 
 
 def split_findings(findings: list[Finding], allow: set[str]):

@@ -316,12 +316,15 @@ class TripCountRule(Rule):
             )]
         trips = [hlo_ir.trip_count(art.hlo.comps, w["cond"]) for w in whiles if w["cond"]]
         if max_iter not in trips:
+            # None entries are data-dependent loops with no recoverable
+            # bound — name them rather than reporting a fabricated 1
+            shown = [t if t is not None else "unbounded" for t in trips]
             return [self.finding(
                 art,
-                f"top-level while trip bound(s) {trips} do not include the "
+                f"top-level while trip bound(s) {shown} do not include the "
                 f"configured max_iter={max_iter} — the compiled iteration cap "
                 "drifted from MWUOptions",
-                trips=trips, max_iter=max_iter,
+                trips=shown, max_iter=max_iter,
             )]
         return []
 

@@ -195,12 +195,19 @@ def _op_bytes(op: Op, comp: Computation, comps) -> float:
     return total
 
 
-def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
-    mod = parse_hlo(text)
+def analyze_hlo(text, num_partitions: int = 1, *, root: str | None = None) -> HloReport:
+    """Cost accounting over ``text`` (HLO string or pre-parsed HloModule).
+
+    ``root`` selects the computation to account from (default: ENTRY).
+    The tracecheck cost model passes a ``while`` *body* computation here
+    to get per-iteration cost — nested loops inside the body are still
+    trip-multiplied, the selected loop itself is counted once.
+    """
+    mod = text if hasattr(text, "comps") else parse_hlo(text)
     comps = mod.comps
     rep = HloReport()
     memo: dict[str, tuple] = {}
-    entry = mod.entry
+    entry = root if root is not None else mod.entry
 
     ZERO = (0.0, 0.0, 0.0, 0.0, {}, 0, [])
 
@@ -233,10 +240,12 @@ def analyze_hlo(text: str, num_partitions: int = 1) -> HloReport:
             if kind == "while":
                 cond = re.search(r"condition=%([\w.\-]+)", op.rest)
                 body = re.search(r"body=%([\w.\-]+)", op.rest)
-                trips = trip_count(comps, cond.group(1)) if cond else 1
+                # trip_count returns None for data-dependent loops; the
+                # roofline then counts the body once (a lower bound)
+                trips = trip_count(comps, cond.group(1)) if cond else None
                 rep.while_trips[op.name] = trips
                 if body:
-                    absorb(analyze_comp(body.group(1)), trips)
+                    absorb(analyze_comp(body.group(1)), trips or 1)
                 continue
             if kind in ("call", "conditional", "async-start", "async-done"):
                 for target in re.findall(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?", op.rest):

@@ -15,20 +15,41 @@ PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
-__all__ = ["roofline_terms", "model_flops_estimate", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+__all__ = [
+    "static_cost_terms",
+    "roofline_terms",
+    "model_flops_estimate",
+    "PEAK_FLOPS",
+    "HBM_BW",
+    "ICI_BW",
+]
 
 
-def roofline_terms(hlo_report, n_devices: int, model_flops: float | None = None) -> dict:
-    compute_s = hlo_report.flops / PEAK_FLOPS
-    memory_s = hlo_report.hbm_bytes / HBM_BW
-    collective_s = hlo_report.collective_wire_bytes / ICI_BW
-    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+def static_cost_terms(flops: float, hbm_bytes: float, wire_bytes: float) -> dict:
+    """Roofline seconds + bottleneck for raw static counts.
+
+    The shared table between the dry-run roofline (whole compiled
+    program) and the tracecheck cost model (one while-body iteration):
+    both divide the same three counters by the same hardware constants.
+    """
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": wire_bytes / ICI_BW,
+    }
     bottleneck = max(terms, key=terms.get)
-    out = {
+    return {
         **terms,
         "bottleneck": bottleneck.replace("_s", ""),
         "step_time_lb_s": max(terms.values()),
     }
+
+
+def roofline_terms(hlo_report, n_devices: int, model_flops: float | None = None) -> dict:
+    out = static_cost_terms(
+        hlo_report.flops, hlo_report.hbm_bytes, hlo_report.collective_wire_bytes
+    )
+    terms = {k: out[k] for k in ("compute_s", "memory_s", "collective_s")}
     if model_flops is not None and hlo_report.flops > 0:
         # useful-compute ratio: global model flops vs global compiled flops
         out["model_flops_ratio"] = model_flops / (hlo_report.flops * n_devices)

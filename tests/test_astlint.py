@@ -1,0 +1,147 @@
+"""repro.tracecheck.astlint: each RPR code fires on a fixture and the
+real tree is clean (ISSUE 10 acceptance criteria). Stdlib-only pass:
+none of these tests may require jax."""
+import os
+import sys
+
+from repro.tracecheck.astlint import (
+    RPR_RULES,
+    format_findings,
+    lint_paths,
+    lint_source,
+    main as astlint_main,
+)
+
+_FIXTURE = '''\
+import os
+import warnings
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_backend_and_branch(x):
+    backend = jax.default_backend()
+    flag = os.environ.get("REPRO_FLAG")
+    if x > 0:
+        return x
+    return -x
+
+
+def widen(x):
+    return x.astype(jnp.float64)
+
+
+def stray_callback(x):
+    jax.experimental.io_callback(print, None, x)
+    return x
+
+
+@partial(jax.jit, static_argnames=("ks",))
+def jitted(x, *, ks):
+    return x
+
+
+def caller(x):
+    return jitted(x, ks=[1, 2])
+
+
+def old_api():
+    warnings.warn("old_api is deprecated", DeprecationWarning)
+'''
+
+
+def _fixture_file(tmp_path):
+    # the file must live under a core/ dir so the RPR003 scope applies
+    d = tmp_path / "core"
+    d.mkdir()
+    p = d / "fixture.py"
+    p.write_text(_FIXTURE)
+    return p
+
+
+def test_fixture_trips_every_rule(tmp_path):
+    _fixture_file(tmp_path)
+    findings = lint_paths([str(tmp_path)])
+    codes = {f.code for f in findings}
+    assert codes == set(RPR_RULES), format_findings(findings)
+    # RPR001 fires for both the backend read and the env read
+    assert sum(1 for f in findings if f.code == "RPR001") == 2
+
+
+def test_ast_cli_exits_nonzero_on_fixture(tmp_path):
+    _fixture_file(tmp_path)
+    assert astlint_main([str(tmp_path)]) == 1
+
+
+def test_source_tree_is_clean():
+    root = os.path.join(os.path.dirname(__file__), os.pardir, "src", "repro")
+    findings = lint_paths([os.path.abspath(root)])
+    assert findings == [], format_findings(findings)
+
+
+def test_package_cli_ast_defaults_to_clean_tree():
+    """`python -m repro.tracecheck --ast` (no paths) lints the package."""
+    from repro.tracecheck.__main__ import main
+
+    assert main(["--ast"]) == 0
+
+
+def test_noqa_suppresses_per_line():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    b = jax.default_backend()  # repro: noqa[RPR001]\n"
+        "    return x\n"
+    )
+    assert lint_source(src, "mod.py") == []
+    # without the annotation the same source is a finding
+    assert lint_source(src.replace("  # repro: noqa[RPR001]", ""), "mod.py") != []
+
+
+def test_static_args_and_shape_branches_are_not_tracer_branches():
+    src = (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.jit, static_argnames=('mode',))\n"
+        "def f(x, mode):\n"
+        "    if mode == 'fast':\n"
+        "        return x\n"
+        "    pad = (8 - x.shape[0] % 8) % 8\n"
+        "    if pad:\n"
+        "        return x\n"
+        "    return -x\n"
+    )
+    assert lint_source(src, "mod.py") == []
+
+
+def test_branch_on_derived_tracer_value_fires():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    y = x + 1\n"
+        "    if y:\n"
+        "        return y\n"
+        "    return x\n"
+    )
+    findings = lint_source(src, "mod.py")
+    assert [f.code for f in findings] == ["RPR002"]
+
+
+def test_astlint_never_imports_jax():
+    """The module must stay importable in the dependency-free lint job."""
+    import importlib
+    import subprocess
+
+    mod = importlib.import_module("repro.tracecheck.astlint")
+    prog = (
+        "import sys; sys.path.insert(0, sys.argv[1]); "
+        "from repro.tracecheck import astlint; "
+        "assert 'jax' not in sys.modules, 'astlint pulled in jax'"
+    )
+    src = os.path.abspath(os.path.join(os.path.dirname(mod.__file__), "..", ".."))
+    subprocess.run([sys.executable, "-c", prog, src], check=True, timeout=120)

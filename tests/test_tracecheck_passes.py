@@ -1,0 +1,217 @@
+"""The differential-jaxpr and cost-model passes (ISSUE 10): parity
+proofs hold on the real tree, fail on perturbations; cost cells gate
+against the committed baseline; capture failures are named findings."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api.solver import Solver
+from repro.core.mwu import MWUOptions
+from repro.tracecheck import costmodel
+from repro.tracecheck.capture import _batch_bounds, _mid_bound, build_problem
+from repro.tracecheck.cli import CAPTURE_RULE, run_matrix
+from repro.tracecheck.diff import (
+    BACKEND_PARITY_RULE,
+    DIST_PARITY_RULE,
+    canonical_tokens,
+    check_backend_parity,
+    check_dist_identity,
+)
+from repro.tracecheck.matrix import Case
+from repro.tracecheck.report import prune_baseline
+from repro.tracecheck.rules import Finding
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("match")
+
+
+@pytest.fixture(scope="module")
+def xla_jaxpr(problem):
+    return Solver(MWUOptions(kernel_backend="xla")).jaxpr_feasible(problem, _mid_bound(problem))
+
+
+# ------------------------------------------------------ backend parity --
+def test_backend_parity_clean_on_real_tree(problem, xla_jaxpr):
+    jp = Solver(MWUOptions(kernel_backend="pallas")).jaxpr_feasible(problem, _mid_bound(problem))
+    assert check_backend_parity(xla_jaxpr, jp, "parity:match:backend") == []
+
+
+def test_backend_parity_fails_on_structural_perturbation(problem, xla_jaxpr):
+    """The traced-hook variant adds an io_callback inside the while body —
+    a structural divergence with no dispatch primitive to excuse it."""
+    jt = Solver(MWUOptions(kernel_backend="xla")).jaxpr_feasible(
+        problem, _mid_bound(problem), trace=True
+    )
+    findings = check_backend_parity(xla_jaxpr, jt, "perturbed")
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == BACKEND_PARITY_RULE and f.severity == "error"
+    assert "io_callback" in f.message
+
+
+# -------------------------------------------------------- dist identity --
+def test_dist_identity_clean_on_real_tree(problem):
+    from repro.dist.mesh import MeshPlan
+    from repro.dist.solver import DistSolver
+
+    bounds = _batch_bounds(problem, 2)
+    js = Solver(MWUOptions()).jaxpr_batch(problem, bounds)
+    jd = DistSolver(MWUOptions(), plan=MeshPlan(pod=1, data=1)).jaxpr_batch(problem, bounds)
+    # the shard_map/pjit shells unwrap to token-for-token equality
+    assert canonical_tokens(js) == canonical_tokens(jd)
+    assert check_dist_identity(js, jd, "parity:match:dist") == []
+
+
+def test_dist_identity_fails_on_perturbation(problem):
+    """Any op-level drift (here: a different smoothing accuracy constant)
+    must produce a failing parity finding."""
+    bounds = _batch_bounds(problem, 2)
+    js = Solver(MWUOptions()).jaxpr_batch(problem, bounds)
+    jd = Solver(MWUOptions(eps=0.05)).jaxpr_batch(problem, bounds)
+    findings = check_dist_identity(js, jd, "perturbed")
+    assert len(findings) == 1
+    assert findings[0].rule == DIST_PARITY_RULE
+    assert findings[0].detail["n_regions"] >= 1
+
+
+# ------------------------------------------------------------ costmodel --
+_COST_HLO = """\
+HloModule synth
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %it = s32[] get-tuple-element((s32[], f32[8,8]) %p), index=0
+  %k = s32[] constant(40)
+  ROOT %lt = pred[] compare(s32[] %it, s32[] %k), direction=LT
+}
+
+%body (q: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %q = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[8,8]) %q), index=0
+  %a = f32[8,8] get-tuple-element((s32[], f32[8,8]) %q), index=1
+  %one = s32[] constant(1)
+  %i1 = s32[] add(s32[] %i, s32[] %one)
+  %d = f32[8,8] dot(f32[8,8] %a, f32[8,8] %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(s32[] %i1, f32[8,8] %d)
+}
+
+ENTRY %main (x: f32[8,8]) -> (s32[], f32[8,8]) {
+  %x = f32[8,8] parameter(0)
+  %z = s32[] constant(0)
+  %c0 = (s32[], f32[8,8]) tuple(s32[] %z, f32[8,8] %x)
+  ROOT %w = (s32[], f32[8,8]) while((s32[], f32[8,8]) %c0), condition=%cond, body=%body
+}
+"""
+
+
+def test_iteration_cost_counts_body_once():
+    cost = costmodel.iteration_cost(_COST_HLO)
+    # one 8x8x8 dot per iteration: NOT multiplied by the trip bound 40
+    assert cost["flops"] == 2 * 8 * 8 * 8
+    assert cost["trip_bound"] == 40
+    assert cost["n_collectives"] == 0
+    assert cost["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_iteration_cost_none_without_loop():
+    assert costmodel.iteration_cost("HloModule empty\n\nENTRY %main (x: f32[4]) -> f32[4] {\n  ROOT %x = f32[4] parameter(0)\n}\n") is None
+
+
+def test_cost_regression_2x_flops_fails():
+    cell = costmodel.iteration_cost(_COST_HLO)
+    baseline = {"synth": {m: cell[m] / 2 if m == "flops" else cell[m]
+                          for m in costmodel.DEFAULT_TOLERANCES}}
+    findings = costmodel.check_costs({"synth": cell}, baseline)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == costmodel.COST_RULE and f.severity == "error"
+    assert f.fingerprint == "cost-regression::synth::flops"
+    assert f.detail["current"] == 2 * f.detail["baseline"]
+
+
+def test_cost_within_tolerance_passes():
+    cell = costmodel.iteration_cost(_COST_HLO)
+    base = {m: cell[m] for m in costmodel.DEFAULT_TOLERANCES}
+    assert costmodel.check_costs({"synth": cell}, {"synth": base}) == []
+    # shrinking never fails (ratcheting down is a baseline regen, not a gate)
+    grown = {m: v * 10 for m, v in base.items()}
+    assert costmodel.check_costs({"synth": cell}, {"synth": grown}) == []
+
+
+def test_extra_collective_fails_at_zero_tolerance():
+    cell = dict(costmodel.iteration_cost(_COST_HLO))
+    cell["n_collectives"] = 1
+    base = {m: 0 if m == "n_collectives" else cell[m] for m in costmodel.DEFAULT_TOLERANCES}
+    findings = costmodel.check_costs({"synth": cell}, {"synth": base})
+    assert [f.key for f in findings] == ["n_collectives"]
+
+
+def test_missing_baseline_warns_not_errors():
+    cell = costmodel.iteration_cost(_COST_HLO)
+    findings = costmodel.check_costs({"new-cell": cell}, {})
+    assert len(findings) == 1
+    assert findings[0].severity == "warning"
+    assert findings[0].key == "missing-baseline"
+
+
+def test_cost_baseline_roundtrip(tmp_path):
+    cell = costmodel.iteration_cost(_COST_HLO)
+    path = str(tmp_path / "cost.json")
+    costmodel.write_cost_baseline({"synth": cell}, path)
+    loaded = costmodel.load_cost_baseline(path)
+    assert set(loaded) == {"synth"}
+    assert loaded["synth"]["flops"] == cell["flops"]
+    assert costmodel.check_costs({"synth": cell}, loaded) == []
+
+
+def test_shipped_cost_baseline_covers_solve_cells():
+    """The committed baseline must gate every family x backend solve cell."""
+    cells = costmodel.load_cost_baseline()
+    for fam in ("match", "vcover", "dense-sub", "gen-match"):
+        for backend in ("xla", "pallas"):
+            assert f"solve:{fam}:{backend}" in cells
+
+
+def test_compiled_solver_cell_produces_cost(problem):
+    hlo = (
+        Solver(MWUOptions())
+        .lower_feasible(problem, _mid_bound(problem))
+        .compile()
+        .as_text()
+    )
+    cost = costmodel.iteration_cost(hlo)
+    assert cost is not None and cost["flops"] > 0 and cost["hbm_bytes"] > 0
+
+
+# ------------------------------------------- capture-error (satellite) --
+def test_capture_failure_is_a_named_finding_not_a_crash():
+    """One broken lowering hook must not abort the sweep: the cell becomes
+    an error finding naming family/backend, later cases still lint."""
+    report = run_matrix(
+        cases=[Case("bogus", "match", "xla"), Case("kernel", op="gather")],
+        verbose=False,
+    )
+    assert not report["ok"]
+    errs = [f for f in report["findings"] if f["rule"] == CAPTURE_RULE]
+    assert len(errs) == 1
+    assert errs[0]["artifact"] == "bogus:match:xla"
+    assert "family `match`" in errs[0]["message"]
+    assert "backend `xla`" in errs[0]["message"]
+    # the sweep continued: the kernel artifact was still captured + linted
+    assert "kernel:gather" in report["artifacts"]
+
+
+# ------------------------------------------- prune-baseline (satellite) --
+def test_prune_baseline_drops_stale_keeps_live(tmp_path):
+    live = Finding(rule="kernel-path", severity="error", artifact="a", message="m", key="missing")
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"allow": [live.fingerprint, "dead-rule::gone::x"]}))
+    removed = prune_baseline([live], str(path))
+    assert removed == ["dead-rule::gone::x"]
+    assert json.loads(path.read_text()) == {"allow": [live.fingerprint]}
+    # idempotent: nothing left to prune
+    assert prune_baseline([live], str(path)) == []
